@@ -1,0 +1,52 @@
+"""Pallas kernel benchmark: CPU(interpret) correctness timing + the analytic
+v5e prediction per kernel from the blocking advisor + machine model (no TPU
+in this container; the prediction is the §Roofline-style number)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking, load_machine
+from repro.kernels import flash_attention, ref, stencil3d7pt
+
+
+def _time(f, *args, n=3):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> str:
+    v5e = load_machine("V5E")
+    lines = []
+    # stencil: interpret-mode correctness + v5e prediction
+    a = jax.random.normal(jax.random.PRNGKey(0), (8, 128, 128), jnp.float32)
+    cvec = [0.1, 0.2, 0.3, 0.15, 0.25, -0.05, 1.0]
+    t_int = _time(lambda x: stencil3d7pt(x, cvec), a, n=1)
+    pts = a.shape[1] * a.shape[2]
+    t_pred = max(13 * pts / v5e.peak_flops.get("FP32", 8.25e12),
+                 4 * pts * 4 / v5e.hbm_bandwidth) * a.shape[0]
+    lines.append(f"stencil3d7pt  (8,128,128): interpret {t_int*1e3:7.1f} ms; "
+                 f"v5e roofline prediction {t_pred*1e6:6.1f} us")
+
+    # flash attention: tile choice + prediction vs ref
+    b, h, s, d = 1, 4, 1024, 128
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, h, s, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, h, s, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, h, s, d), jnp.float32)
+    t_int = _time(lambda *xs: flash_attention(*xs), q, k, v, n=1)
+    t_ref = _time(lambda *xs: ref.attention(*xs), q, k, v, n=1)
+    tiles = blocking.attention_tiles(s, s, d, 4, v5e.vmem_bytes)
+    flops = 4 * b * h * s * s * d / 2          # causal
+    t_pred = flops / v5e.peak_flops.get("BF16", 197e12)
+    lines.append(f"flash_attention (1,4,1024,128): interpret {t_int*1e3:7.1f}"
+                 f" ms (ref jnp {t_ref*1e3:.1f} ms); LC tiles bq={tiles.bq} "
+                 f"bkv={tiles.bkv}; v5e MXU bound {t_pred*1e6:.1f} us")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,34 @@
+"""Paper §1.2.2: ECM notation for the 3D-7pt stencil on IVY(§1.2 params):
+{13.2 || 7 | 14 | 10 | 9.1} cy/CL, and the Roofline/ECM comparison of
+Fig. 1."""
+import pathlib
+
+from repro.core import ecm, load_machine, parse_kernel, roofline
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+
+def run() -> str:
+    m = load_machine("IVY122")
+    k = parse_kernel((STENCILS / "stencil_3d7pt.c").read_text(),
+                     constants={"M": 300, "N": 700})
+    e = ecm.model(k, m, predictor="LC")
+    r = roofline.model(k, m, predictor="LC", variant="IACA")
+    perf = e.performance_flops(cores=1)
+    lines = [
+        f"ECM notation        : {e.notation()}",
+        "paper               : { 13.2 || 7 | 14 | 10 | 9.1 } cy/CL "
+        "(T_OL from IACA; our port model gives the same data terms)",
+        f"T_ECM               : {e.t_ecm:.1f} cy/CL",
+        f"saturation cores    : {e.saturation_cores}",
+        f"1-core ECM perf     : {perf/1e9:.2f} GFLOP/s",
+        f"Roofline bottleneck : {r.bottleneck} "
+        f"({r.performance/1e9:.2f} GFLOP/s lightspeed; paper: 8.94 GF/s "
+        "from T_MEM=32.2cy)",
+    ]
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,49 @@
+"""Paper Figs 3/4: single-core N-sweep of the long-range stencil with both
+cache predictors. The LC curve is smooth with the L3 3D->2D step at N=546;
+the simulator additionally reproduces the L1-thrashing spike at
+N = 1792 = 7*256 (associativity pathology invisible to LC)."""
+import pathlib
+
+from repro.core import ecm, load_machine, parse_kernel
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+SWEEP_LC = [100, 200, 400, 540, 560, 700, 1015, 1400, 1790, 2000]
+SWEEP_SIM = [400, 546, 1015, 1786, 1792, 1798]
+
+
+def _kernel(n):
+    # M chosen so the working set never fits any cache (paper's protocol)
+    m = max(34_000_000 // (n * n), 9)
+    return parse_kernel((STENCILS / "stencil_3d_long_range.c").read_text(),
+                        name="3d-long-range", constants={"M": m, "N": n})
+
+
+def run(fast: bool = True) -> str:
+    m = load_machine("IVY")
+    lines = ["   N | T_ECM(LC) cy/8it | MLUP/s(LC) | T_ECM(SIM) | note"]
+    sim_points = SWEEP_SIM[:3] if fast else SWEEP_SIM
+    for n in SWEEP_LC:
+        k = _kernel(n)
+        e = ecm.model(k, m, predictor="LC")
+        mlups = 8 / (e.t_ecm / m.clock_hz) / 1e6
+        note = ""
+        if n in (540, 560):
+            note = "L3 3D->2D transition at N=546"
+        lines.append(f"{n:5d} | {e.t_ecm:12.1f}     | {mlups:8.2f}   |"
+                     f"            | {note}")
+    lines.append("-- simulator points (associativity-aware) --")
+    for n in sim_points:
+        k = _kernel(n)
+        e = ecm.model(k, m, predictor="SIM",
+                      sim_kwargs={"warmup_rows": 2, "measure_rows": 1})
+        mlups = 8 / (e.t_ecm / m.clock_hz) / 1e6
+        note = "L1 thrash (7*256)" if n == 1792 else ""
+        lines.append(f"{n:5d} |                  |            | "
+                     f"{e.t_ecm:8.1f}   | {note}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(run(fast=False))

@@ -1,0 +1,29 @@
+"""Paper Fig 5: single-socket strong scaling of the long-range stencil
+(N=1015, M=130ish): perfect scaling to the predicted saturation point
+(4 cores), constant at the bandwidth limit beyond."""
+import pathlib
+
+from repro.core import ecm, load_machine, parse_kernel
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+
+def run() -> str:
+    m = load_machine("IVY")
+    k = parse_kernel((STENCILS / "stencil_3d_long_range.c").read_text(),
+                     name="3d-long-range", constants={"M": 132, "N": 1015})
+    e = ecm.model(k, m, predictor="LC")
+    curve = e.scaling_curve(10)
+    lines = [f"predicted saturation point: n_s = {e.saturation_cores} cores "
+             "(paper: 4)",
+             "cores | GFLOP/s (ECM scaling model)"]
+    for i, p in enumerate(curve, 1):
+        bar = "#" * int(p / 1e9 * 2)
+        sat = "  <- n_s" if i == e.saturation_cores else ""
+        lines.append(f"{i:5d} | {p/1e9:6.2f} {bar}{sat}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(run())

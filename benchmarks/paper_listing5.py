@@ -1,0 +1,20 @@
+"""Paper Listing 5: layer-condition transition points of the long-range
+stencil (the L3 3D->2D transition at N = 546 visible in Figs 3/4)."""
+import pathlib
+
+from repro.core import load_machine, parse_kernel, reports
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+
+def run() -> str:
+    m = load_machine("IVY")
+    k = parse_kernel((STENCILS / "stencil_3d_long_range.c").read_text(),
+                     name="3d-long-range", constants={"M": 130, "N": 1015})
+    txt = reports.lc_report(k, m, symbol="N")
+    return txt + "\npaper: 3D LC in L3 holds for N <= 546"
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,48 @@
+"""§Roofline table: renders the dry-run artifacts (launch/dryrun.py output
+under artifacts/dryrun/) as the per-(arch x shape x mesh) three-term
+roofline table of EXPERIMENTS.md."""
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / \
+    "dryrun"
+
+HDR = ("| arch | shape | mesh | T_comp ms | T_mem ms | T_coll ms | dominant "
+       "| GiB/dev | useful | roofline frac |")
+SEP = "|" + "---|" * 10
+
+
+def rows(mesh_filter: str | None = "pod16x16"):
+    out = []
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        out.append(r)
+    return out
+
+
+def render(mesh_filter: str | None = "pod16x16") -> str:
+    lines = [HDR, SEP]
+    for r in rows(mesh_filter):
+        gib = r["memory"]["total_per_device"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']*1e3:.2f} | {r['t_memory']*1e3:.2f} "
+            f"| {r['t_collective']*1e3:.2f} | {r['dominant']} "
+            f"| {gib:.2f} | {r['useful_flop_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    if len(lines) == 2:
+        lines.append("| (no dry-run artifacts yet — run "
+                     "`python -m repro.launch.dryrun --all`) " + "|" * 10)
+    return "\n".join(lines)
+
+
+def run() -> str:
+    n = len(rows(None))
+    return (f"{n} dry-run artifacts\n" + render("pod16x16")
+            + "\n\nmulti-pod (2x16x16):\n" + render("pod2x16x16"))
+
+
+if __name__ == "__main__":
+    print(run())

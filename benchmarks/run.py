@@ -1,0 +1,50 @@
+"""Benchmark harness: one section per paper table/figure (deliverable d)
+plus the TPU-adaptation and dry-run roofline sections.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+import argparse
+import time
+
+from benchmarks import (kernels_bench, paper_ecm, paper_fig5, paper_fig34,
+                        paper_listing4, paper_listing5, paper_table1,
+                        roofline_table, tpu_ecm)
+
+SECTIONS = [
+    ("Paper Table 1 — 3D-7pt Roofline volumes & times", paper_table1.run),
+    ("Paper §1.2.2 — ECM notation for 3D-7pt", paper_ecm.run),
+    ("Paper Listing 4 — long-range stencil ECM + RooflineIACA",
+     paper_listing4.run),
+    ("Paper Listing 5 — layer-condition transition points",
+     paper_listing5.run),
+    ("Paper Figs 3/4 — N-sweep, LC vs cache simulator", paper_fig34.run),
+    ("Paper Fig 5 — strong scaling & saturation point", paper_fig5.run),
+    ("TPU adaptation — v5e ECM/Roofline for the Pallas kernels",
+     tpu_ecm.run),
+    ("Pallas kernels — interpret timing + v5e predictions",
+     kernels_bench.run),
+    ("§Roofline — dry-run artifacts table", roofline_table.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="run the slow cache-simulator sweep points too")
+    args = ap.parse_args()
+    t00 = time.perf_counter()
+    for title, fn in SECTIONS:
+        print("=" * 72)
+        print(title)
+        print("=" * 72)
+        t0 = time.perf_counter()
+        if fn is paper_fig34.run:
+            print(fn(fast=not args.full))
+        else:
+            print(fn())
+        print(f"[{time.perf_counter()-t0:.1f}s]\n")
+    print(f"total: {time.perf_counter()-t00:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Batched serving example (deliverable b): a small model served through
+the Engine + BatchedServer driver — prefill, KV-cached decode, bucketed
+request batching, throughput report.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+
+from repro import configs
+from repro.models.common import materialize
+from repro.models.lm import LM
+from repro.serve import Engine
+from repro.serve.engine import BatchedServer, Request
+
+cfg = configs.reduced(configs.get_config("granite-8b"))
+model = LM(cfg)
+params = materialize(model.param_recs(), jax.random.PRNGKey(0))
+engine = Engine(model, params, max_len=128)
+server = BatchedServer(engine, batch_size=4)
+
+prompts = [[7, 3, 9], [1, 2], [5, 5, 5, 5], [11, 12, 13],
+           [2], [8, 1, 6, 4, 2], [9, 9], [3, 1, 4, 1, 5]]
+t0 = time.perf_counter()
+for i, p in enumerate(prompts):
+    server.submit(Request(uid=i, tokens=p, max_new=12))
+done = server.drain()
+dt = time.perf_counter() - t0
+
+tok = sum(len(r.result) for r in done)
+print(f"served {len(done)} requests / {tok} tokens in {dt:.2f}s "
+      f"({tok/dt:.1f} tok/s incl. compile)")
+for r in done:
+    print(f"  req {r.uid}: prompt {r.tokens} -> {r.result}")
+
+# second wave hits the already-compiled engine (steady-state throughput)
+for i, p in enumerate(prompts):
+    server.submit(Request(uid=100 + i, tokens=p, max_new=12))
+t0 = time.perf_counter()
+done = server.drain()
+dt = time.perf_counter() - t0
+tok = sum(len(r.result) for r in done)
+print(f"steady state: {tok} tokens in {dt:.2f}s ({tok/dt:.1f} tok/s)")

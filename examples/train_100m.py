@@ -1,0 +1,67 @@
+"""End-to-end training driver (deliverable b): train a ~100M-parameter
+granite-family model for a few hundred steps with the full production
+substrate — synthetic data pipeline, AdamW + cosine schedule, grad
+accumulation, async sharded checkpoints, watchdog, resume.
+
+The default invocation is CPU-sized (~10M params, 120 steps, a few
+minutes); pass --full for the 100M x 300-step run (hours on this CPU
+container; the config is the point, the wall time is the container's).
+
+    PYTHONPATH=src python examples/train_100m.py [--full] [--steps N]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro import configs
+from repro.data import SyntheticLM
+from repro.models.lm import LM
+from repro.optim import OptConfig
+from repro.train import TrainConfig, Trainer
+
+
+def build_cfg(full: bool):
+    base = configs.get_config("granite-8b")
+    if full:     # ~100M params
+        return dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab=32768, tp=1)
+    return dataclasses.replace(       # ~10M params: CPU-friendly
+        base, n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+        head_dim=32, d_ff=1024, vocab=8192, tp=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+    steps = args.steps or (300 if args.full else 120)
+
+    cfg = build_cfg(args.full)
+    model = LM(cfg)
+    n = cfg.param_count()
+    print(f"model: {n/1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model} ff={cfg.d_ff} v={cfg.vocab})")
+
+    data = SyntheticLM(vocab=cfg.vocab, seq=256 if args.full else 128,
+                       global_batch=16 if args.full else 8)
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=3e-3, weight_decay=0.01),
+        microbatches=2, warmup_steps=steps // 10, total_steps=steps)
+    trainer = Trainer(model, data, tcfg, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=50,
+                      log_path=f"{args.ckpt_dir}_metrics.jsonl")
+    trainer.run(steps, key=jax.random.PRNGKey(0))
+    losses = [m["loss"] for m in trainer.metrics_log if "loss" in m]
+    k = max(1, len(losses) // 10)
+    print(f"loss: first-{k}-avg {sum(losses[:k])/k:.3f} -> "
+          f"last-{k}-avg {sum(losses[-k:])/k:.3f} over {len(losses)} steps")
+    print(f"stragglers flagged: {trainer.watchdog.straggler_steps}")
+    print(f"checkpoints in {args.ckpt_dir} (resume by re-running)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+# The paper's primary contribution: automatic analytic performance modeling
+# (Roofline, ECM, layer conditions, cache simulation, in-core port model,
+# blocking-factor prediction), retargeted from x86 caches to the TPU
+# VREG<-VMEM<-HBM(<-ICI) hierarchy. See DESIGN.md §2-3.
+from . import (blocking, c_parser, cachesim, ecm, incore, kernel_ir,
+               layer_conditions, machine, roofline)  # noqa: F401
+
+from .c_parser import parse_kernel  # noqa: F401
+from .kernel_ir import FlopCount, LoopKernel  # noqa: F401
+from .machine import Machine, load as load_machine  # noqa: F401

@@ -1,0 +1,145 @@
+"""Blocking-factor prediction — layer conditions inverted (paper §2.3 'Layer
+Conditions' + §2.4.2), adapted to software-managed VMEM.
+
+On x86, LC analysis *predicts* what an LRU cache will keep; solving
+``C_req <= C`` for a loop size gives the spatial blocking factor that makes a
+condition hold. On TPU the same algebra *chooses* Pallas ``BlockSpec`` shapes:
+the working set implied by a block shape must fit VMEM, and within that
+constraint MXU-aligned (multiples of 8×128) blocks should be as large as
+possible. Every Pallas kernel in :mod:`repro.kernels` sizes its blocks here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import sympy
+
+from . import layer_conditions
+from .kernel_ir import LoopKernel
+
+LANE = 128     # TPU lane count: last dim of a VMEM tile
+SUBLANE = 8    # penultimate dim granule (fp32)
+
+
+def lc_block_size(kernel: LoopKernel, cache_bytes: float, symbol: str = "N",
+                  safety: float = 0.5) -> int:
+    """Largest inner size for which the *strongest* layer condition holds in
+    a cache of ``cache_bytes`` (times ``safety``). This is the paper's
+    'optimal spatial blocking factor' — e.g. blocking the long-range stencil
+    for L3 keeps the 3D condition alive past N = 546.
+    """
+    trans = layer_conditions.transition_points(kernel, cache_bytes * safety, symbol)
+    # strongest condition first (largest reuse-distance threshold); fall back
+    # to weaker conditions if the strongest never holds for positive sizes
+    for tr in reversed(trans):
+        if tr.max_value == math.inf:
+            return 1 << 30          # condition holds unconditionally
+        if tr.max_value > 1:
+            return int(tr.max_value)
+    return 0
+
+
+def _round_down(v: int, granule: int) -> int:
+    return max(granule, (v // granule) * granule)
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilBlock:
+    bk: int
+    bj: int
+    bi: int
+    halo: int
+    vmem_bytes: float
+
+
+def stencil_blocks(radius: int, shape: tuple[int, int, int], n_arrays: int,
+                   elem_bytes: int, vmem_bytes: float,
+                   budget: float = 0.5) -> StencilBlock:
+    """Pick a 3-D block (bk, bj, bi) whose haloed working set for all arrays
+    fits the VMEM budget; bi is lane-aligned, bj sublane-aligned. Prefers
+    wide bi (contiguous DMA), then bj, then bk — the LC ordering: inner
+    dimensions carry the shortest reuse distances.
+    """
+    K, J, I = shape
+    limit = vmem_bytes * budget
+
+    def ws(bk: int, bj: int, bi: int) -> float:
+        return n_arrays * (bk + 2 * radius) * (bj + 2 * radius) \
+            * (bi + 2 * radius) * elem_bytes
+
+    bi = _round_down(min(I, 2048), LANE)
+    while bi > LANE and ws(1, SUBLANE, bi) > limit:
+        bi -= LANE
+    bj = _round_down(min(J, 512), SUBLANE)
+    while bj > SUBLANE and ws(1, bj, bi) > limit:
+        bj -= SUBLANE
+    bk = min(K, 64)
+    while bk > 1 and ws(bk, bj, bi) > limit:
+        bk -= 1
+    return StencilBlock(bk=bk, bj=bj, bi=bi, halo=radius,
+                        vmem_bytes=ws(bk, bj, bi))
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulTiles:
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: float
+
+
+def matmul_tiles(m: int, n: int, k: int, elem_bytes: int, vmem_bytes: float,
+                 budget: float = 0.5, out_bytes: int = 4) -> MatmulTiles:
+    """(bm, bn, bk) with bm·bk + bk·bn (operands) + bm·bn (fp32 accum) within
+    the VMEM budget, all MXU-aligned. Larger bk amortizes the accumulator
+    write-back; larger bm·bn raises arithmetic intensity — so grow the output
+    tile first (the ∞-distance streams), then bk (the reuse dimension),
+    mirroring how LC orders reuse distances.
+    """
+    limit = vmem_bytes * budget
+
+    def ws(bm: int, bn: int, bk_: int) -> float:
+        return (bm * bk_ + bk_ * bn) * elem_bytes + bm * bn * out_bytes
+
+    bm = _round_down(min(m, 512), LANE if m >= LANE else SUBLANE)
+    bn = _round_down(min(n, 512), LANE)
+    bk = _round_down(min(k, 2048), LANE)
+    while ws(bm, bn, bk) > limit and bk > LANE:
+        bk = _round_down(bk // 2, LANE)
+    while ws(bm, bn, bk) > limit and bn > LANE:
+        bn = _round_down(bn // 2, LANE)
+    while ws(bm, bn, bk) > limit and bm > SUBLANE:
+        bm = _round_down(bm // 2, SUBLANE)
+    return MatmulTiles(bm=bm, bn=bn, bk=bk, vmem_bytes=ws(bm, bn, bk))
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionTiles:
+    bq: int
+    bkv: int
+    vmem_bytes: float
+
+
+def attention_tiles(seq_q: int, seq_kv: int, head_dim: int, elem_bytes: int,
+                    vmem_bytes: float, budget: float = 0.4) -> AttentionTiles:
+    """Flash-attention block sizes: q-tile (bq×d), k/v tiles (bkv×d each),
+    score tile (bq×bkv fp32) and accumulator (bq×d fp32) must fit VMEM.
+    The KV stream has the ∞ reuse distance (streamed once per q-tile), the
+    q tile is the 'layer' kept resident — the LC structure of attention.
+    """
+    limit = vmem_bytes * budget
+
+    def ws(bq: int, bkv: int) -> float:
+        return (bq * head_dim * elem_bytes            # q tile
+                + 2 * bkv * head_dim * elem_bytes     # k, v tiles
+                + bq * bkv * 4                        # scores fp32
+                + bq * head_dim * 4                   # accumulator fp32
+                + bq * 2 * 4)                         # m, l online-softmax state
+    bq = _round_down(min(seq_q, 1024), SUBLANE)
+    bkv = _round_down(min(seq_kv, 1024), LANE)
+    while ws(bq, bkv) > limit and bkv > LANE:
+        bkv = _round_down(bkv // 2, LANE)
+    while ws(bq, bkv) > limit and bq > SUBLANE:
+        bq = _round_down(bq // 2, SUBLANE)
+    return AttentionTiles(bq=bq, bkv=bkv, vmem_bytes=ws(bq, bkv))

@@ -1,0 +1,302 @@
+"""Set-associative cache-hierarchy simulator (the pycachesim analog, §2.4.1).
+
+Pure-Python, line-granular, inclusive write-back/write-allocate hierarchy
+with LRU / FIFO / RR (random) replacement. Unlike layer conditions, the
+simulator sees real set indices, so it reproduces associativity pathologies
+such as the L1 thrashing spike of the paper's Fig. 3 at N = 1792 = 7·256
+(rows map to two sets; 17 concurrently-live rows > 2 sets × 8 ways).
+
+The driver follows the paper's §2.4.1 protocol: run a warm-up phase, align
+its end to a cache-line boundary, reset the statistics, simulate an exact
+number of inner iterations, and read the steady-state counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from collections import OrderedDict
+
+import sympy
+
+from .kernel_ir import LoopKernel
+from .machine import Machine
+
+
+@dataclasses.dataclass
+class CacheStats:
+    loads: int = 0
+    stores: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    writebacks: int = 0
+
+    def reset(self) -> None:
+        self.loads = self.stores = self.hits = self.misses = 0
+        self.evictions = self.writebacks = 0
+
+
+class Cache:
+    """One set-associative cache level."""
+
+    def __init__(self, name: str, sets: int, ways: int, cl_size: int,
+                 policy: str = "LRU", write_back: bool = True,
+                 write_allocate: bool = True, parent: "Cache | None" = None,
+                 seed: int = 0):
+        self.name = name
+        self.sets = sets
+        self.ways = ways
+        self.cl_size = cl_size
+        self.policy = policy.upper()
+        self.write_back = write_back
+        self.write_allocate = write_allocate
+        self.parent = parent
+        self.stats = CacheStats()
+        # per set: OrderedDict tag -> dirty (move_to_end models LRU recency)
+        self._sets: list[OrderedDict[int, bool]] = [OrderedDict() for _ in range(sets)]
+        self._rng = random.Random(seed)
+
+    # ------------------------------------------------------------------
+    def _locate(self, line: int) -> tuple[OrderedDict, int]:
+        return self._sets[line % self.sets], line
+
+    def _touch(self, s: OrderedDict, tag: int) -> None:
+        if self.policy == "LRU":
+            s.move_to_end(tag)
+        # FIFO/RR: insertion order untouched
+
+    def _evict_one(self, s: OrderedDict) -> None:
+        if self.policy == "RR" or self.policy == "RANDOM":
+            tag = self._rng.choice(list(s.keys()))
+        else:  # LRU and FIFO both evict the head of the OrderedDict
+            tag = next(iter(s))
+        dirty = s.pop(tag)
+        self.stats.evictions += 1
+        if dirty and self.write_back and self.parent is not None:
+            self.stats.writebacks += 1
+            self.parent._write_line(tag)
+
+    def _insert(self, line: int, dirty: bool) -> None:
+        s, tag = self._locate(line)
+        if tag in s:
+            s[tag] = s[tag] or dirty
+            self._touch(s, tag)
+            return
+        if len(s) >= self.ways:
+            self._evict_one(s)
+        s[tag] = dirty
+
+    # -- external interface (line granularity) -------------------------
+    def load_line(self, line: int) -> None:
+        self.stats.loads += 1
+        s, tag = self._locate(line)
+        if tag in s:
+            self.stats.hits += 1
+            self._touch(s, tag)
+            return
+        self.stats.misses += 1
+        if self.parent is not None:
+            self.parent.load_line(line)
+        self._insert(line, dirty=False)
+
+    def store_line(self, line: int) -> None:
+        self.stats.stores += 1
+        s, tag = self._locate(line)
+        if tag in s:
+            self.stats.hits += 1
+            s[tag] = True
+            self._touch(s, tag)
+            return
+        self.stats.misses += 1
+        if self.write_allocate:
+            if self.parent is not None:
+                self.parent.load_line(line)
+            self._insert(line, dirty=True)
+        else:
+            self._write_line_through(line)
+
+    def _write_line(self, line: int) -> None:
+        """Receive a write-back from the child level (no allocate miss count)."""
+        s, tag = self._locate(line)
+        if tag in s:
+            s[tag] = True
+            self._touch(s, tag)
+        else:
+            # inclusive hierarchy: should normally hit; allocate to be safe
+            if self.parent is not None:
+                pass
+            self._insert(line, dirty=True)
+
+    def _write_line_through(self, line: int) -> None:
+        if self.parent is not None:
+            self.parent.store_line(line)
+
+    def reset_stats(self) -> None:
+        self.stats.reset()
+        if self.parent:
+            self.parent.reset_stats()
+
+
+class MainMemory:
+    """Terminal level: counts traffic, never misses."""
+
+    def __init__(self) -> None:
+        self.name = "MEM"
+        self.stats = CacheStats()
+        self.parent = None
+
+    def load_line(self, line: int) -> None:
+        self.stats.loads += 1
+        self.stats.hits += 1
+
+    def store_line(self, line: int) -> None:
+        self.stats.stores += 1
+
+    def _write_line(self, line: int) -> None:
+        self.stats.stores += 1
+
+    def reset_stats(self) -> None:
+        self.stats.reset()
+
+
+def build_hierarchy(machine: Machine, seed: int = 0) -> list[Cache | MainMemory]:
+    """First-level cache first; last element is main memory."""
+    mem = MainMemory()
+    levels: list[Cache | MainMemory] = [mem]
+    parent: Cache | MainMemory = mem
+    for lv in reversed(machine.levels):
+        sets = lv.sets or max(1, int(lv.size_bytes // (max(1, lv.ways or 8) * lv.cl_size)))
+        ways = lv.ways or 8
+        c = Cache(lv.name, sets, ways, lv.cl_size, lv.replacement_policy,
+                  lv.write_back, lv.write_allocate, parent=parent, seed=seed)
+        levels.insert(0, c)
+        parent = c
+    return levels
+
+
+@dataclasses.dataclass
+class SimResult:
+    iterations: int
+    per_level: dict[str, CacheStats]
+    # traffic INTO each level from the next-farther one, bytes per iteration
+    load_bytes_per_it: dict[str, float]
+    evict_bytes_per_it: dict[str, float]
+    first_level_load_bytes_per_it: float
+    first_level_store_bytes_per_it: float
+
+    def total_bytes_per_it(self, level: str) -> float:
+        return self.load_bytes_per_it[level] + self.evict_bytes_per_it[level]
+
+
+class _AffineAccess:
+    """Precompiled access: addr = base + const + Σ coeff_i * loopvar_i."""
+
+    __slots__ = ("coeffs", "const", "is_write", "elem")
+
+    def __init__(self, acc, loop_vars: list[sympy.Symbol], base: int, subs: dict):
+        off = sympy.expand(acc.offset().subs(subs))
+        poly = sympy.Poly(off, *loop_vars) if off.free_symbols & set(loop_vars) \
+            else None
+        coeffs = []
+        if poly is not None:
+            for v in loop_vars:
+                coeffs.append(int(poly.coeff_monomial(v)))
+            const = int(poly.coeff_monomial(1))
+        else:
+            coeffs = [0] * len(loop_vars)
+            const = int(off)
+        eb = acc.array.element_bytes
+        self.coeffs = [c * eb for c in coeffs]
+        self.const = base + const * eb
+        self.is_write = acc.is_write
+        self.elem = eb
+
+
+def simulate(kernel: LoopKernel, machine: Machine, warmup_rows: int = 2,
+             measure_rows: int = 1, seed: int = 0,
+             max_level_bytes: float | None = None) -> SimResult:
+    """Simulate ``warmup_rows`` inner rows, reset stats, measure
+    ``measure_rows`` rows (a row = one full inner-loop sweep). The warm-up
+    start is placed mid-array so the steady-state neighborhood exists, and
+    rows are whole inner sweeps, so measurement is cache-line aligned
+    (paper §2.4.1).
+    """
+    subs = kernel.subs()
+    hierarchy = build_hierarchy(machine, seed)
+    first = hierarchy[0]
+
+    # lay out arrays back to back, 4 KiB aligned like a real allocator
+    bases: dict[str, int] = {}
+    addr = 1 << 20
+    for name, arr in kernel.arrays.items():
+        bases[name] = addr
+        size = int(sympy.sympify(arr.size_elements).subs(subs)) * arr.element_bytes
+        addr += (size + 4095) // 4096 * 4096
+
+    loop_vars = [lp.var for lp in kernel.loops]
+    accesses = [_AffineAccess(a, loop_vars, bases[a.array.name], subs)
+                for a in kernel.accesses]
+
+    bounds = []
+    for lp in kernel.loops:
+        b0 = int(sympy.sympify(lp.start).subs(subs))
+        b1 = int(sympy.sympify(lp.stop).subs(subs))
+        bounds.append((b0, b1, lp.step))
+
+    # choose a mid-domain starting point for outer loops (steady neighborhood)
+    outer_vals = []
+    for (b0, b1, _s) in bounds[:-1]:
+        outer_vals.append(max(b0, (b0 + b1) // 2))
+    i0, i1, istep = bounds[-1]
+    cl = machine.cacheline_bytes
+    total_rows = warmup_rows + measure_rows
+
+    def run_row(row_idx: int, vals: list[int]) -> None:
+        fixed = [a.const + sum(c * v for c, v in zip(a.coeffs[:-1], vals))
+                 for a in accesses]
+        for i in range(i0, i1, istep):
+            for a, f in zip(accesses, fixed):
+                line = (f + a.coeffs[-1] * i) // cl
+                if a.is_write:
+                    first.store_line(line)
+                else:
+                    first.load_line(line)
+
+    # iterate consecutive (outer...) positions row by row: advance the
+    # second-innermost loop var; wrap into the next-outer when exhausted.
+    def advance(vals: list[int]) -> list[int]:
+        vals = list(vals)
+        for d in range(len(vals) - 1, -1, -1):
+            b0, b1, s = bounds[d]
+            vals[d] += s
+            if vals[d] < b1:
+                return vals
+            vals[d] = b0
+        return vals
+
+    vals = list(outer_vals)
+    it_per_row = max(1, (i1 - i0 + istep - 1) // istep)
+    for r in range(total_rows):
+        if r == warmup_rows:
+            for lvl in hierarchy:
+                lvl.reset_stats()
+        run_row(r, vals)
+        vals = advance(vals)
+
+    iters = it_per_row * measure_rows
+    per_level = {lvl.name: lvl.stats for lvl in hierarchy}
+    load_bpi: dict[str, float] = {}
+    evict_bpi: dict[str, float] = {}
+    for lvl in hierarchy[:-1]:
+        load_bpi[lvl.name] = lvl.stats.misses * cl / iters
+        evict_bpi[lvl.name] = lvl.stats.writebacks * cl / iters
+    n_reads = sum(1 for a in accesses if not a.is_write)
+    n_writes = len(accesses) - n_reads
+    return SimResult(
+        iterations=iters, per_level=per_level,
+        load_bytes_per_it=load_bpi, evict_bytes_per_it=evict_bpi,
+        first_level_load_bytes_per_it=float(
+            sum(a.elem for a in accesses if not a.is_write) * istep),
+        first_level_store_bytes_per_it=float(
+            sum(a.elem for a in accesses if a.is_write) * istep),
+    )

@@ -1,0 +1,121 @@
+"""The Execution-Cache-Memory model (paper §1.2.2, §3.2).
+
+``T_ECM = max(T_OL, T_nOL + T_L1L2 + T_L2L3 + T_L3MEM)`` on x86 (strictly
+non-overlapping hierarchy, as Kerncraft implements). For TPU machines, each
+level carries an ``overlap`` flag: overlapping transfers (double-buffered
+DMA) contribute max-wise, serialized ones add — see DESIGN.md §2.
+
+Multicore/multichip scaling assumes perfect scalability until the shared
+bottleneck saturates: ``n_s = ceil(T_ECM / T_mem)`` (paper §3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import incore, layer_conditions
+from .cachesim import simulate
+from .kernel_ir import LoopKernel
+from .machine import Machine
+
+
+@dataclasses.dataclass(frozen=True)
+class ECMResult:
+    unit_iterations: int
+    t_ol: float
+    t_nol: float
+    contributions: list[tuple[str, float]]   # [('L1-L2', cy), ...] serialized
+    overlapped: list[tuple[str, float]]      # TPU overlap-mode contributions
+    flops_per_unit: float
+    clock_hz: float
+
+    @property
+    def t_data(self) -> float:
+        return self.t_nol + sum(c for _, c in self.contributions)
+
+    @property
+    def t_ecm(self) -> float:
+        cand = [self.t_ol, self.t_data]
+        cand += [c for _, c in self.overlapped]
+        return max(cand)
+
+    @property
+    def t_mem(self) -> float:
+        terms = self.contributions + self.overlapped
+        return terms[-1][1] if terms else 0.0
+
+    @property
+    def saturation_cores(self) -> int:
+        if self.t_mem <= 0:
+            return 1
+        return max(1, math.ceil(self.t_ecm / self.t_mem))
+
+    def notation(self) -> str:
+        segs = " | ".join(f"{c:.1f}" for _, c in self.contributions)
+        return ("{ " + f"{self.t_ol:.1f} || {self.t_nol:.1f}"
+                + (f" | {segs}" if segs else "") + " } cy/CL")
+
+    def notation_cumulative(self) -> str:
+        acc = self.t_nol
+        parts = [f"{max(self.t_ol, acc):.1f}"]
+        for _, c in self.contributions:
+            acc += c
+            parts.append(f"{max(self.t_ol, acc):.1f}")
+        return "{ " + " \\ ".join(parts) + " } cy/CL"
+
+    # --- performance conversions --------------------------------------
+    def performance_flops(self, cores: int = 1) -> float:
+        """Predicted flop/s at ``cores`` under the saturation model."""
+        if self.flops_per_unit == 0 or self.t_ecm == 0:
+            return 0.0
+        single = self.flops_per_unit / self.t_ecm * self.clock_hz
+        sat = (self.flops_per_unit / self.t_mem * self.clock_hz
+               if self.t_mem > 0 else math.inf)
+        return min(single * cores, sat)
+
+    def scaling_curve(self, max_cores: int) -> list[float]:
+        return [self.performance_flops(n) for n in range(1, max_cores + 1)]
+
+
+def _data_terms(kernel: LoopKernel, machine: Machine, volumes_bpi: dict[str, float],
+                unit: int) -> tuple[list[tuple[str, float]], list[tuple[str, float]]]:
+    serial: list[tuple[str, float]] = []
+    overlapped: list[tuple[str, float]] = []
+    names = machine.level_names
+    for i, lv in enumerate(machine.levels):
+        vol = volumes_bpi.get(lv.name, 0.0) * unit
+        nxt = names[i + 1] if i + 1 < len(names) else "MEM"
+        if lv.cycles_per_cacheline is not None:
+            cy = vol / lv.cl_size * lv.cycles_per_cacheline
+        elif lv.bandwidth_bytes_per_cycle:
+            cy = vol / lv.bandwidth_bytes_per_cycle
+        else:  # last level: measured saturated main-memory bandwidth
+            cy = vol * machine.clock_hz / machine.main_memory_bandwidth
+        (overlapped if lv.overlap else serial).append((f"{lv.name}-{nxt}", cy))
+    return serial, overlapped
+
+
+def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
+          cores: int = 1, sim_kwargs: dict | None = None) -> ECMResult:
+    """Build the full ECM model: in-core + cache prediction + data terms.
+
+    ``predictor``: 'LC' (layer conditions) or 'SIM' (cache simulation),
+    mirroring the paper's ``--cache-predictor`` switch.
+    """
+    unit = kernel.iterations_per_cacheline(machine.cacheline_bytes)
+    ic = incore.analyze_x86(kernel, machine)
+    volumes: dict[str, float] = {}
+    if predictor.upper() == "LC":
+        states = layer_conditions.volumes_per_level(kernel, machine, cores=cores)
+        for name, st in states.items():
+            volumes[name] = st.total_bytes_per_it
+    elif predictor.upper() == "SIM":
+        res = simulate(kernel, machine, **(sim_kwargs or {}))
+        for name in machine.level_names:
+            volumes[name] = res.total_bytes_per_it(name)
+    else:
+        raise ValueError(f"unknown predictor {predictor!r}")
+    serial, overl = _data_terms(kernel, machine, volumes, unit)
+    return ECMResult(unit_iterations=unit, t_ol=ic.t_ol, t_nol=ic.t_nol,
+                     contributions=serial, overlapped=overl,
+                     flops_per_unit=ic.flops_per_unit, clock_hz=machine.clock_hz)

@@ -1,0 +1,114 @@
+"""In-core execution model — the IACA analog (paper §2.5).
+
+IACA is closed-source and x86-only, so Kerncraft-for-TPU replaces it with an
+analytic port-throughput model driven by the machine description:
+
+* x86 mode: one ADD and one MUL FP port of the native SIMD width, separate
+  load/store ports with byte-per-cycle throughputs. Cycles are reported per
+  *unit of work* (the iterations spanning one cache line, usually 8), split
+  into the ECM's overlapping part ``T_OL`` (arithmetic + stores) and
+  non-overlapping part ``T_nOL`` (loads), exactly like Kerncraft aggregates
+  IACA's per-port throughput into the two classes listed in the machine file.
+
+* TPU mode: the MXU executes contraction flops, the VPU elementwise flops;
+  VMEM->VREG loads and VREG->VMEM stores have their own throughputs. ``T_OL``
+  is the compute (MXU/VPU) time, ``T_nOL`` the VMEM register traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .kernel_ir import LoopKernel
+from .machine import Machine
+
+
+@dataclasses.dataclass(frozen=True)
+class InCoreResult:
+    unit_iterations: int          # iterations per unit of work (one CL)
+    t_ol: float                   # cy per unit: overlapping (arith + stores)
+    t_nol: float                  # cy per unit: non-overlapping (loads)
+    port_cycles: dict[str, float]
+    flops_per_unit: float
+
+    @property
+    def t_core(self) -> float:
+        return max(self.t_ol, self.t_nol)
+
+
+def analyze_x86(kernel: LoopKernel, machine: Machine,
+                precision: str = "DP") -> InCoreResult:
+    unit = kernel.iterations_per_cacheline(machine.cacheline_bytes)
+    fc = kernel.flops
+    rates = machine.flops_per_cycle.get(precision, {"ADD": 4, "MUL": 4})
+    add_rate = float(rates.get("ADD", 4)) or 1e-12
+    mul_rate = float(rates.get("MUL", 4)) or 1e-12
+    div_rate = float(rates.get("DIV", add_rate / 14.0)) or 1e-12
+
+    t_add = fc.add * unit / add_rate
+    t_mul = fc.mul * unit / mul_rate
+    t_div = fc.div * unit / div_rate
+    # FMA counts against both ports on machines without FMA units
+    fma_rate = float(rates.get("FMA", 0))
+    if fma_rate:
+        t_fma = fc.fma * unit / fma_rate
+    else:
+        t_fma = 0.0
+        t_add += fc.fma * unit / add_rate
+        t_mul += fc.fma * unit / mul_rate
+
+    load_bytes = sum(a.array.element_bytes for a in kernel.reads()) * unit
+    store_bytes = sum(a.array.element_bytes for a in kernel.writes()) * unit
+    t_load = load_bytes / machine.load_bytes_per_cycle
+    t_store = store_bytes / machine.store_bytes_per_cycle
+
+    t_ol = max(t_add, t_mul, t_div, t_fma, t_store)
+    t_nol = t_load
+    return InCoreResult(
+        unit_iterations=unit, t_ol=t_ol, t_nol=t_nol,
+        port_cycles={"ADD": t_add, "MUL": t_mul, "DIV": t_div,
+                     "LOAD": t_load, "STORE": t_store},
+        flops_per_unit=fc.total * unit)
+
+
+def peak_performance(machine: Machine, precision: str = "DP") -> float:
+    """Absolute peak, flops/cycle."""
+    return float(machine.flops_per_cycle.get(precision, {}).get("total", 8))
+
+
+def applicable_peak(kernel: LoopKernel, machine: Machine,
+                    precision: str = "DP") -> float:
+    """P_max of paper §1.2.1: peak reduced by the add/mul imbalance of the
+    kernel (flops per cycle). With a balanced mix this is the full peak;
+    with a pure-add or pure-mul kernel it is half (one port idle).
+    """
+    fc = kernel.flops
+    rates = machine.flops_per_cycle.get(precision, {"ADD": 4, "MUL": 4})
+    adds = fc.add + fc.fma
+    muls = fc.mul + fc.fma + fc.div
+    total = fc.total
+    if total == 0:
+        return peak_performance(machine, precision)
+    # cycles to issue one iteration's arithmetic, port-limited:
+    cyc = max(adds / float(rates.get("ADD", 4)), muls / float(rates.get("MUL", 4)))
+    if cyc == 0:
+        return peak_performance(machine, precision)
+    return total / cyc
+
+
+def analyze_tpu(machine: Machine, mxu_flops: float, vpu_flops: float,
+                vmem_load_bytes: float, vmem_store_bytes: float,
+                dtype: str = "BF16", unit_iterations: int = 1) -> InCoreResult:
+    """TPU in-core model for one unit of work (e.g. one kernel grid step)."""
+    rates = machine.flops_per_cycle.get(dtype.upper(), {})
+    mxu_rate = float(rates.get("MXU", 131072))
+    vpu_rate = float(rates.get("FMA", 4096)) * 2  # fma = 2 flops
+    t_mxu = mxu_flops / mxu_rate
+    t_vpu = vpu_flops / vpu_rate
+    t_load = vmem_load_bytes / machine.load_bytes_per_cycle
+    t_store = vmem_store_bytes / machine.store_bytes_per_cycle
+    return InCoreResult(
+        unit_iterations=unit_iterations,
+        t_ol=max(t_mxu, t_vpu),
+        t_nol=t_load + t_store,
+        port_cycles={"MXU": t_mxu, "VPU": t_vpu, "VLD": t_load, "VST": t_store},
+        flops_per_unit=mxu_flops + vpu_flops)

@@ -1,0 +1,242 @@
+"""Machine-description model (Kerncraft §2.2, adapted).
+
+A machine description carries three parts, mirroring the paper:
+  1. execution architecture (ports, flops/cy, clock),
+  2. memory hierarchy (per-level caches + inter-level transfer throughput),
+  3. streaming-benchmark results (measured bandwidths per level/core-count).
+
+Two families of machines are shipped in ``repro/configs/machines``:
+  * ``ivybridge_ep.yaml``  — the paper's Table 2 machine, used to validate the
+    engine against the paper's published numbers.
+  * ``tpu_v5e.yaml``       — the TPU target: VREG <- VMEM <- HBM (<- ICI),
+    software-managed "caches", documented constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import pathlib
+from typing import Any
+
+import yaml
+
+_MACHINE_DIR = pathlib.Path(__file__).resolve().parent.parent / "configs" / "machines"
+
+INF = float("inf")
+
+
+def _parse_size(v: Any) -> float:
+    """Parse '32 kB' / '25.00 MB' / ints into bytes."""
+    if isinstance(v, (int, float)):
+        return float(v)
+    s = str(v).strip()
+    units = {"b": 1, "kb": 1e3, "kib": 1024, "mb": 1e6, "mib": 1024**2,
+             "gb": 1e9, "gib": 1024**3, "tb": 1e12, "tib": 1024**4}
+    for u in sorted(units, key=len, reverse=True):
+        if s.lower().endswith(u):
+            return float(s[: -len(u)].strip()) * units[u]
+    return float(s)
+
+
+def _parse_bw(v: Any) -> float:
+    """Parse '47.2 GB/s' into bytes/s."""
+    if isinstance(v, (int, float)):
+        return float(v)
+    s = str(v).strip().lower().replace("/s", "")
+    return _parse_size(s)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLevel:
+    """One level of the memory hierarchy.
+
+    ``size_bytes`` is the capacity visible to one core's working set.
+    ``cycles_per_cacheline`` is the documented transfer throughput from the
+    *next* (farther) level into this one (paper: 'cycles per cacheline
+    transfer'); ``None`` for the last level before main memory, where the
+    measured memory bandwidth is used instead.
+    """
+    name: str
+    size_bytes: float
+    sets: int = 0
+    ways: int = 0
+    cl_size: int = 64
+    replacement_policy: str = "LRU"
+    write_allocate: bool = True
+    write_back: bool = True
+    cycles_per_cacheline: float | None = None
+    cores_per_group: int = 1
+    groups: int = 1
+    overlap: bool = False          # TPU mode: does this transfer overlap compute?
+    bandwidth_bytes_per_cycle: float | None = None  # alternative to cy/CL
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchmarkKernel:
+    name: str
+    flops_per_iteration: int
+    read_streams: int
+    write_streams: int
+    readwrite_streams: int
+    bytes_per_iteration: float
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchmarkResult:
+    kernel: str
+    level: str
+    threads_per_core: int
+    cores: tuple[int, ...]
+    bandwidth_bytes: tuple[float, ...]   # measured bandwidth (w/o write-allocate)
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    name: str
+    arch: str                      # 'x86' | 'tpu'
+    clock_hz: float
+    cores_per_socket: int
+    cacheline_bytes: int
+    # --- in-core model (the IACA-analog inputs) ---
+    # throughput of each port class, per cycle, for the native SIMD width
+    flops_per_cycle: dict[str, dict[str, float]]  # {'DP': {'ADD': 4, 'MUL': 4, ...}}
+    load_bytes_per_cycle: float
+    store_bytes_per_cycle: float
+    overlapping_ports: tuple[str, ...]
+    non_overlapping_ports: tuple[str, ...]
+    # --- memory hierarchy, closest (L1/VMEM) first ---
+    levels: tuple[CacheLevel, ...]
+    main_memory_bandwidth: float   # saturated, bytes/s (ECM memory term)
+    # --- streaming benchmarks (Roofline inputs) ---
+    kernels: dict[str, BenchmarkKernel] = dataclasses.field(default_factory=dict)
+    results: tuple[BenchmarkResult, ...] = ()
+    # --- TPU extras ---
+    peak_flops: dict[str, float] = dataclasses.field(default_factory=dict)  # dtype -> flops/s
+    hbm_bandwidth: float = 0.0
+    vmem_bytes: float = 0.0
+    ici_link_bandwidth: float = 0.0
+    ici_links: int = 4
+    chips: int = 1
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    @property
+    def level_names(self) -> list[str]:
+        return [lv.name for lv in self.levels]
+
+    def level(self, name: str) -> CacheLevel:
+        for lv in self.levels:
+            if lv.name == name:
+                return lv
+        raise KeyError(name)
+
+    def measured_bandwidth(self, level: str, cores: int = 1,
+                           read_streams: int = 1, write_streams: int = 1,
+                           readwrite_streams: int = 0) -> tuple[float, str]:
+        """Pick the benchmark kernel that most closely matches the stream mix
+        of the analyzed kernel (paper §2.3 Roofline) and return its measured
+        bandwidth at ``cores`` for ``level``.
+        """
+        best: tuple[float, str] | None = None
+        best_score = INF
+        for res in self.results:
+            if res.level != level:
+                continue
+            k = self.kernels[res.kernel]
+            score = (abs(k.read_streams - read_streams)
+                     + abs(k.write_streams - write_streams)
+                     + abs(k.readwrite_streams - readwrite_streams))
+            if score < best_score:
+                idx = min(cores, len(res.cores)) - 1
+                best = (res.bandwidth_bytes[idx], res.kernel)
+                best_score = score
+        if best is None:
+            raise ValueError(f"no benchmark result for level {level}")
+        return best
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_dict(cls, d: dict) -> "Machine":
+        levels = []
+        for lv in d.get("memory hierarchy", []):
+            cpg = lv.get("cache per group", {})
+            size = cpg.get("size")
+            if size is None and cpg:
+                size = cpg.get("sets", 0) * cpg.get("ways", 0) * cpg.get("cl_size", 64)
+            levels.append(CacheLevel(
+                name=lv["level"],
+                size_bytes=_parse_size(size if size else lv.get("size", 0)),
+                sets=int(cpg.get("sets", 0)),
+                ways=int(cpg.get("ways", 0)),
+                cl_size=int(cpg.get("cl_size", d.get("cacheline size", 64))),
+                replacement_policy=cpg.get("replacement_policy", "LRU"),
+                write_allocate=bool(cpg.get("write_allocate", True)),
+                write_back=bool(cpg.get("write_back", True)),
+                cycles_per_cacheline=lv.get("cycles per cacheline transfer"),
+                cores_per_group=int(lv.get("cores per group", 1)),
+                groups=int(lv.get("groups", 1)),
+                overlap=bool(lv.get("overlap", False)),
+                bandwidth_bytes_per_cycle=lv.get("bandwidth bytes per cycle"),
+            ))
+        kernels = {}
+        results = []
+        bench = d.get("benchmarks", {})
+        for kname, kd in bench.get("kernels", {}).items():
+            kernels[kname] = BenchmarkKernel(
+                name=kname,
+                flops_per_iteration=int(kd.get("FLOPs per iteration", 0)),
+                read_streams=int(kd.get("read streams", {}).get("streams", 0)),
+                write_streams=int(kd.get("write streams", {}).get("streams", 0)),
+                readwrite_streams=int(kd.get("read+write streams", {}).get("streams", 0)),
+                bytes_per_iteration=_parse_size(kd.get("read streams", {}).get("bytes", 0))
+                + _parse_size(kd.get("write streams", {}).get("bytes", 0)),
+            )
+        for level_name, md in bench.get("measurements", {}).items():
+            for tpc, block in md.items():
+                for kname, bws in block.get("results", {}).items():
+                    results.append(BenchmarkResult(
+                        kernel=kname, level=level_name, threads_per_core=int(tpc),
+                        cores=tuple(block["cores"]),
+                        bandwidth_bytes=tuple(_parse_bw(b) for b in bws)))
+        peak = {k: _parse_bw(v) for k, v in d.get("peak flops", {}).items()}
+        return cls(
+            name=d.get("model name", "unknown"),
+            arch=d.get("arch", "x86"),
+            clock_hz=_parse_bw(d.get("clock", "1 GHz").replace("Hz", "B")),
+            cores_per_socket=int(d.get("cores per socket", 1)),
+            cacheline_bytes=int(d.get("cacheline size", 64)),
+            flops_per_cycle=d.get("FLOPs per cycle", {}),
+            load_bytes_per_cycle=float(d.get("load bytes per cycle", 32)),
+            store_bytes_per_cycle=float(d.get("store bytes per cycle", 16)),
+            overlapping_ports=tuple(str(p) for p in d.get("overlapping ports", [])),
+            non_overlapping_ports=tuple(str(p) for p in d.get("non-overlapping ports", [])),
+            levels=tuple(levels),
+            main_memory_bandwidth=_parse_bw(d.get("main memory bandwidth", 0)),
+            kernels=kernels,
+            results=tuple(results),
+            peak_flops=peak,
+            hbm_bandwidth=_parse_bw(d.get("hbm bandwidth", 0)),
+            vmem_bytes=_parse_size(d.get("vmem size", 0)),
+            ici_link_bandwidth=_parse_bw(d.get("ici link bandwidth", 0)),
+            ici_links=int(d.get("ici links", 4)),
+            chips=int(d.get("chips", 1)),
+            extra=d.get("extra", {}),
+        )
+
+    @classmethod
+    def from_yaml(cls, path: str | pathlib.Path) -> "Machine":
+        path = pathlib.Path(path)
+        if not path.exists() and not path.is_absolute():
+            path = _MACHINE_DIR / path
+        with open(path) as f:
+            return cls.from_dict(yaml.safe_load(f))
+
+
+def load(name: str) -> Machine:
+    """Load a bundled machine description by short name, e.g. ``IVY``/``V5E``."""
+    aliases = {
+        "IVY": "ivybridge_ep.yaml",
+        "IVY122": "ivybridge_ep_sec122.yaml",
+        "V5E": "tpu_v5e.yaml",
+    }
+    return Machine.from_yaml(aliases.get(name.upper(), name))

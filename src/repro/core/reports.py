@@ -1,0 +1,57 @@
+"""CLI-style reports mirroring the paper's Listings 4 and 5."""
+from __future__ import annotations
+
+from . import layer_conditions
+from .ecm import ECMResult
+from .kernel_ir import LoopKernel
+from .machine import Machine
+from .roofline import RooflineResult
+
+
+def _gf(x: float) -> str:
+    return f"{x / 1e9:.2f} GFLOP/s"
+
+
+def ecm_report(res: ECMResult) -> str:
+    lines = ["-" * 26 + " ECM " + "-" * 26,
+             res.notation(),
+             res.notation_cumulative(),
+             f"saturating at {res.saturation_cores} cores"]
+    return "\n".join(lines)
+
+
+def roofline_report(res: RooflineResult, cores: int = 1) -> str:
+    lines = ["-" * 21 + " RooflineIACA " + "-" * 21, "Bottlenecks:",
+             "  level | a. intensity |   performance   |  bandwidth  | bw kernel"]
+    lines.append(f"  CPU   |              | {_gf(res.core_performance):>15} |"
+                 f"             |")
+    for l in res.levels:
+        ai = ("" if l.arithmetic_intensity == float("inf")
+              else f"{l.arithmetic_intensity:.2f} FLOP/B")
+        lines.append(f"  {l.level:<5} | {ai:>12} | {_gf(l.performance):>15} |"
+                     f" {l.bandwidth / 1e9:>6.2f} GB/s | {l.bench_kernel}")
+    bn = res.bottleneck
+    lines.append(f"Cache or mem bound with {cores} core(s)" if bn != "CPU"
+                 else f"CPU bound with {cores} core(s)")
+    lines.append(f"{_gf(res.performance)} due to {bn} bottleneck")
+    if res.levels:
+        lines.append(f"Arithmetic Intensity: "
+                     f"{res.levels[-1].arithmetic_intensity:.2f} FLOP/B")
+    return "\n".join(lines)
+
+
+def lc_report(kernel: LoopKernel, machine: Machine, symbol: str = "N") -> str:
+    """Paper Listing 5: per-level LC transition points."""
+    lines = ["-" * 20 + " Layer conditions " + "-" * 20]
+    for lv in machine.levels:
+        trans = layer_conditions.transition_points(kernel, lv.size_bytes, symbol)
+        lines.append(f"{lv.name} ({lv.size_bytes / 1024:.0f} kB):")
+        for tr in trans:
+            cond = ("streaming (no reuse)" if tr.threshold == 0
+                    else f"t <= {tr.threshold}")
+            nmax = ("always" if tr.max_value == float("inf")
+                    else f"{symbol} <= {tr.max_value:.0f}")
+            lines.append(f"    {cond:<28} holds for {nmax:<16} "
+                         f"(hits {tr.hits}, misses {tr.misses}, "
+                         f"C_req {tr.c_req})")
+    return "\n".join(lines)

@@ -1,0 +1,121 @@
+"""Roofline model (paper §1.2.1, §2.3) in both variants.
+
+``Roofline``      — counts high-level flops against the machine's FLOPs/cy
+                    table and models L1<->register traffic with the measured
+                    L1 streaming bandwidth.
+``RooflineIACA``  — replaces the in-core bound with the port model
+                    (:mod:`repro.core.incore`), the preferred variant.
+
+For every memory level: ``T_k = β_k / B_k`` with β_k from the cache
+predictor (LC or SIM) and B_k the measured streaming bandwidth of the
+benchmark kernel whose read/write stream mix best matches the analyzed
+kernel. The bottleneck is ``max_k(T_core, T_k)`` — equivalently the level
+with the smallest ``AI_k · B_k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import incore, layer_conditions
+from .cachesim import simulate
+from .kernel_ir import LoopKernel
+from .machine import Machine
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineLevel:
+    level: str
+    arithmetic_intensity: float   # flop / byte out of this level
+    bandwidth: float              # bytes/s (measured, stream-matched)
+    bench_kernel: str
+    performance: float            # flop/s bound by this level
+    time_cy_per_unit: float       # cy per unit of work (8 it)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineResult:
+    unit_iterations: int
+    t_core: float                 # cy per unit
+    core_performance: float       # flop/s
+    levels: list[RooflineLevel]
+    flops_per_unit: float
+    clock_hz: float
+
+    @property
+    def bottleneck(self) -> str:
+        perf, lvl = self.core_performance, "CPU"
+        for l in self.levels:
+            if l.performance < perf:
+                perf, lvl = l.performance, l.level
+        return lvl
+
+    @property
+    def performance(self) -> float:
+        return min([self.core_performance] + [l.performance for l in self.levels])
+
+    @property
+    def time_cy(self) -> float:
+        return max([self.t_core] + [l.time_cy_per_unit for l in self.levels])
+
+
+def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
+          variant: str = "IACA", cores: int = 1,
+          sim_kwargs: dict | None = None) -> RooflineResult:
+    unit = kernel.iterations_per_cacheline(machine.cacheline_bytes)
+    flops_unit = kernel.flops.total * unit
+
+    # ---- in-core bound -------------------------------------------------
+    if variant.upper() == "IACA":
+        ic = incore.analyze_x86(kernel, machine)
+        t_core = ic.t_core
+        core_perf = (flops_unit / t_core * machine.clock_hz
+                     if t_core > 0 else math.inf)
+    else:
+        pmax = incore.applicable_peak(kernel, machine)     # flop/cy
+        core_perf = pmax * machine.clock_hz * cores
+        t_core = flops_unit / pmax if pmax else 0.0
+
+    # ---- per-level transfer bounds --------------------------------------
+    volumes: dict[str, float] = {}
+    if predictor.upper() == "LC":
+        states = layer_conditions.volumes_per_level(kernel, machine, cores=cores)
+        volumes = {k: st.total_bytes_per_it for k, st in states.items()}
+    else:
+        res = simulate(kernel, machine, **(sim_kwargs or {}))
+        volumes = {k: res.total_bytes_per_it(k) for k in machine.level_names}
+
+    r, w, rw = kernel.stream_counts()
+    levels: list[RooflineLevel] = []
+    names = machine.level_names
+    flops_it = kernel.flops.total
+    for i, lv in enumerate(machine.levels):
+        vol_it = volumes.get(lv.name, 0.0)
+        # traffic out of level i feeds the roofline entry of the *next* level
+        label = names[i + 1] if i + 1 < len(names) else "MEM"
+        try:
+            bw, bench = machine.measured_bandwidth(label, cores, r, w, rw)
+        except (ValueError, KeyError):
+            bw, bench = machine.main_memory_bandwidth, "copy"
+        ai = flops_it / vol_it if vol_it > 0 else math.inf
+        perf = ai * bw
+        t_cy = vol_it * unit * machine.clock_hz / bw if bw else 0.0
+        levels.append(RooflineLevel(level=label, arithmetic_intensity=ai,
+                                    bandwidth=bw, bench_kernel=bench,
+                                    performance=perf, time_cy_per_unit=t_cy))
+    # L1<->register entry (classic variant models it with L1 bandwidth)
+    if variant.upper() != "IACA":
+        l1_bytes = kernel.first_level_bytes() if hasattr(kernel, "first_level_bytes") \
+            else sum(a.array.element_bytes for a in kernel.accesses)
+        try:
+            bw, bench = machine.measured_bandwidth("L1", cores, r, w, rw)
+            ai = flops_it / l1_bytes
+            levels.insert(0, RooflineLevel(
+                level="L1", arithmetic_intensity=ai, bandwidth=bw,
+                bench_kernel=bench, performance=ai * bw,
+                time_cy_per_unit=l1_bytes * unit * machine.clock_hz / bw))
+        except (ValueError, KeyError):
+            pass
+    return RooflineResult(unit_iterations=unit, t_core=t_core,
+                          core_performance=core_perf, levels=levels,
+                          flops_per_unit=flops_unit, clock_hz=machine.clock_hz)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot-spots the paper analyzes
+(stencils, Listing 1 & 3) plus the LM serving/training hot-spot (flash
+attention), each with a pure-jnp oracle in ref.py and LC-derived BlockSpec
+tiling via ops.py."""
+from . import ref  # noqa: F401
+from .ops import flash_attention, longrange3d, stencil3d7pt  # noqa: F401

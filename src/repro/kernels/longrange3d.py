@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the paper's Listing-3 3D long-range (radius-4,
+25-point) star stencil — the paper's §3 case study.
+
+Working set per grid step: NINE V-planes (k-4..k+4) + the U and ROC planes
+at k — the 3D layer condition of the long-range stencil (the paper's
+Listing 5 shows it breaking in L3 at N = 546 on IVY; on TPU v5e the same
+algebra says 11 planes x N² x 4 B must fit VMEM, i.e. N ≲ 1700 — checked
+against core.blocking.stencil_blocks by the ops wrapper).
+
+Like the 7-point kernel, halo planes are shifted BlockSpecs of V; pallas
+pipelines the plane DMAs across grid steps, so consecutive k steps re-fetch
+8 of 9 planes from HBM unless the compiler's window reuse kicks in — the
+pessimistic (ECM, serial) vs optimistic (Roofline, overlapped) bracket of
+DESIGN.md §2 applies verbatim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RADIUS = 4
+
+
+def _kernel(*refs):
+    # refs: v[k-4] .. v[k+4] (9), u, roc, coef, out
+    vplanes = [r[0] for r in refs[:9]]
+    u = refs[9][0]
+    roc = refs[10][0]
+    c = refs[11]
+    out_ref = refs[12]
+    k = pl.program_id(0)
+    nk = pl.num_programs(0)
+    r = RADIUS
+    N = u.shape[0]
+
+    cur = vplanes[r]
+    lap = c[0] * cur[r:-r, r:-r]
+    for d in range(1, r + 1):
+        lap = lap + c[d] * (
+            cur[r:-r, r + d:N - r + d] + cur[r:-r, r - d:N - r - d]     # i+-d
+            + cur[r + d:N - r + d, r:-r] + cur[r - d:N - r - d, r:-r]   # j+-d
+            + vplanes[r + d][r:-r, r:-r] + vplanes[r - d][r:-r, r:-r])  # k+-d
+    upd = 2.0 * cur[r:-r, r:-r] - u[r:-r, r:-r] + roc[r:-r, r:-r] * lap
+    out = u.at[r:-r, r:-r].set(upd.astype(u.dtype))
+    boundary = jnp.logical_or(k < r, k >= nk - r)
+    out_ref[0] = jnp.where(boundary, u, out)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def longrange3d(u, v, roc, coeffs, *, interpret: bool = True):
+    """u, v, roc: (M, N, N); coeffs: (5,) = c0..c4. Returns updated U
+    (boundary width 4 = u, matching the paper's loop bounds)."""
+    M, N, _ = u.shape
+    grid = (M,)
+
+    def vplane(dk):
+        return pl.BlockSpec((1, N, N),
+                            lambda k, _dk=dk: (jnp.clip(k + _dk, 0, M - 1),
+                                               0, 0))
+
+    in_specs = [vplane(dk) for dk in range(-RADIUS, RADIUS + 1)]
+    in_specs += [pl.BlockSpec((1, N, N), lambda k: (k, 0, 0)),   # u
+                 pl.BlockSpec((1, N, N), lambda k: (k, 0, 0)),   # roc
+                 pl.BlockSpec((5,), lambda k: (0,))]             # coeffs
+    args = [v] * 9 + [u, roc, coeffs]
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, N, N), lambda k: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=interpret,
+    )(*args)

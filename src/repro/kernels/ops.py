@@ -1,0 +1,75 @@
+"""Public jit'd wrappers for the Pallas kernels, with block sizes chosen by
+the layer-condition blocking advisor (core.blocking) against the target
+machine's VMEM — the paper's §2.4.2 "ab-initio blocking factors" applied to
+software-managed memory. On CPU (this container) kernels run in
+interpret=True mode; on a real TPU backend, pass interpret=False."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking, machine as machine_mod
+from repro.kernels import flash_attention as _fa
+from repro.kernels import longrange3d as _lr
+from repro.kernels import stencil3d7pt as _s7
+
+_V5E = None
+
+
+def _v5e():
+    global _V5E
+    if _V5E is None:
+        _V5E = machine_mod.load("V5E")
+    return _V5E
+
+
+def stencil3d7pt(a, coeffs, interpret: bool = True):
+    """Validates the 3-plane working set (3D layer condition) fits VMEM."""
+    M, N, _ = a.shape
+    vmem = _v5e().vmem_bytes
+    blk = blocking.stencil_blocks(1, (M, N, N), n_arrays=2,
+                                  elem_bytes=a.dtype.itemsize,
+                                  vmem_bytes=vmem)
+    ws = 4 * N * N * a.dtype.itemsize          # 3 in planes + 1 out plane
+    if ws > vmem:
+        raise ValueError(
+            f"N={N}: plane working set {ws/2**20:.0f} MiB exceeds VMEM "
+            f"({vmem/2**20:.0f} MiB); advisor suggests bi={blk.bi}, "
+            f"bj={blk.bj} tiling")
+    return _s7.stencil3d7pt(a, jnp.asarray(coeffs, a.dtype),
+                            interpret=interpret)
+
+
+def longrange3d(u, v, roc, coeffs, interpret: bool = True):
+    """Validates the 11-plane (9 V + U + ROC) working set fits VMEM."""
+    M, N, _ = u.shape
+    vmem = _v5e().vmem_bytes
+    ws = 12 * N * N * u.dtype.itemsize         # + 1 out plane
+    if ws > vmem:
+        blk = blocking.stencil_blocks(4, (M, N, N), n_arrays=3,
+                                      elem_bytes=u.dtype.itemsize,
+                                      vmem_bytes=vmem)
+        raise ValueError(
+            f"N={N}: working set {ws/2**20:.0f} MiB exceeds VMEM; "
+            f"advisor: {blk}")
+    return _lr.longrange3d(u, v, roc, jnp.asarray(coeffs, u.dtype),
+                           interpret=interpret)
+
+
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = True,
+                    q_offset: int | None = None):
+    """Block sizes from the LC advisor; kv heads broadcast for GQA callers."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    tiles = blocking.attention_tiles(sq, skv, d, q.dtype.itemsize,
+                                     _v5e().vmem_bytes)
+    bq = max(8, min(tiles.bq, sq))
+    bkv = max(128 if skv % 128 == 0 else skv, 1) if skv < 128 else \
+        min(tiles.bkv, skv)
+    while sq % bq:
+        bq //= 2
+    while skv % bkv:
+        bkv //= 2
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=bq,
+                               block_kv=bkv, q_offset=q_offset,
+                               interpret=interpret)

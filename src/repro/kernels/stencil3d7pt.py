@@ -1,0 +1,65 @@
+"""Pallas TPU kernel for the paper's Listing-1 3D 7-point star stencil.
+
+TPU adaptation of the paper's cache analysis (DESIGN.md §2): the kernel
+streams k-planes through VMEM — the grid walks k, and each step holds the
+THREE (N, N) planes k-1, k, k+1 resident. That working set is *exactly* the
+3D layer condition of paper §2.4.2 (`3 layers must fit the cache`), realized
+here as a software decision instead of an LRU prediction: pallas double-
+buffers the plane fetches (HBM→VMEM DMA overlaps compute — the `overlap`
+flag of the TPU-ECM machine model).
+
+The three planes arrive as three BlockSpecs of the *same* input array with
+shifted index maps (k-1, k, k+1) — Pallas' way of expressing halo reads.
+Plane fit in VMEM is asserted against the blocking advisor
+(core.blocking.stencil_blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(prev_ref, cur_ref, nxt_ref, coef_ref, out_ref):
+    k = pl.program_id(0)
+    nk = pl.num_programs(0)
+    prev = prev_ref[0]          # (N, N) plane k-1 (clamped at boundary)
+    cur = cur_ref[0]
+    nxt = nxt_ref[0]
+    cW, cE, cN, cS, cF, cB, s = (coef_ref[i] for i in range(7))
+
+    N = cur.shape[0]
+    inner = (
+        cW * cur[1:-1, :-2] + cE * cur[1:-1, 2:]
+        + cN * cur[:-2, 1:-1] + cS * cur[2:, 1:-1]
+        + cF * prev[1:-1, 1:-1] + cB * nxt[1:-1, 1:-1]
+        + s * cur[1:-1, 1:-1])
+    out = cur
+    out = out.at[1:-1, 1:-1].set(inner.astype(cur.dtype))
+    # k boundary: out = input plane untouched
+    boundary = jnp.logical_or(k == 0, k == nk - 1)
+    out_ref[0] = jnp.where(boundary, cur, out)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stencil3d7pt(a, coeffs, *, interpret: bool = True):
+    """a: (M, N, N) float32/float64->float32. coeffs: (7,) in W,E,N,S,F,B,s
+    order. Returns b with boundary = a."""
+    M, N, _ = a.shape
+    grid = (M,)
+
+    def shifted(dk):
+        return pl.BlockSpec((1, N, N),
+                            lambda k: (jnp.clip(k + dk, 0, M - 1), 0, 0))
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[shifted(-1), shifted(0), shifted(+1),
+                  pl.BlockSpec((7,), lambda k: (0,))],
+        out_specs=pl.BlockSpec((1, N, N), lambda k: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, a, a, coeffs)

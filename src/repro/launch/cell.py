@@ -1,0 +1,208 @@
+"""Cell builder: everything needed to lower one (arch × shape × mesh) cell.
+
+This is the glue between configs, the sharding-rule engine, and jit:
+``build_cell`` returns the step callable, abstract (ShapeDtypeStruct) args,
+and the in/out shardings — the dry-run lowers them, the real launchers
+execute them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import common
+from repro.models.lm import LM
+from repro.optim import OptConfig
+from repro.train import TrainConfig, make_train_step
+
+# Big models quantize optimizer state to int8 (DESIGN.md §5 / §Perf): this
+# is what lets deepseek-v3 fit the 512-chip multi-pod mesh.
+_QUANTIZE_OPT = {"deepseek-v3-671b", "llama4-maverick-400b-a17b",
+                 "qwen1.5-110b"}
+
+
+def rule_for(cfg: configs.ArchConfig, shape: configs.ShapeSpec,
+             multi_pod: bool) -> dict:
+    """Pick the sharding-rule table for a cell (DESIGN.md §5).
+
+    * train: FSDP over data (+pod when multi-pod), Megatron-SP sequence
+      sharding for attention families, embed-activation sharding for
+      SSM/hybrid (the chunked scan needs contiguous sequence).
+    * decode: batch over data; MLA's head-free latent cache shards its
+      sequence over `model` (flash-decoding on the latent).
+    * long: batch=1 — KV sequence shards over `data` instead.
+    """
+    ssm_like = cfg.family in ("ssm", "hybrid")
+    kind = "long" if shape.long else shape.kind
+    # MoE dispatch groups = number of token shards on the data(+pod) axes
+    # (group-local dispatch; the group<->expert transpose is the EP a2a)
+    moe_groups = 16 * (2 if multi_pod else 1)
+    if kind == "train":
+        r = common.rules(
+            "train", fsdp=True, pods_in_batch=multi_pod,
+            seq_axis=None if ssm_like else "model",
+            act_embed_axis="model" if ssm_like else None,
+            fsdp_axes=("pod", "data") if multi_pod else ("data",))
+    elif kind == "prefill":
+        r = common.rules(
+            "prefill", fsdp=cfg.zero_inference, pods_in_batch=multi_pod,
+            seq_axis=None if ssm_like else "model",
+            act_embed_axis="model" if ssm_like else None)
+    elif kind == "decode":
+        r = common.rules(
+            "decode", fsdp=cfg.zero_inference, pods_in_batch=multi_pod,
+            kv_seq_axis="model" if cfg.mla else None)
+        if cfg.moe:
+            # serving: 2-D expert-weight sharding (experts x eff) keeps the
+            # weights resident instead of gathering them per token (§Perf)
+            r["eff"] = "data"
+    else:  # long_500k: batch=1, flash-decoding SP over `data`
+        r = common.rules(
+            "long", fsdp=cfg.zero_inference, pods_in_batch=multi_pod,
+            kv_seq_axis="data")
+        if cfg.moe:
+            r["eff"] = "data"
+        moe_groups = 1
+    r["moe_groups"] = moe_groups
+    return r
+
+
+def _batch_axes(rule) -> Any:
+    return rule.get("batch")
+
+
+def batch_specs(cfg: configs.ArchConfig, shape: configs.ShapeSpec,
+                rule: dict) -> dict:
+    b = _batch_axes(rule)
+    out = {"tokens": P(b, None)}
+    if shape.kind == "train":
+        out["labels"] = P(b, None)
+    if cfg.n_img_tokens and shape.kind != "decode":
+        out["patch_embeds"] = P(b, None, None)
+    if cfg.encdec and shape.kind != "decode":
+        out["frames"] = P(b, None, None)
+    return out
+
+
+def opt_abstract(recs, optcfg: OptConfig):
+    """ShapeDtypeStruct tree matching adamw_init's state structure."""
+    def moment(r: common.PRec):
+        if optcfg.quantize_state:
+            return {"q": jax.ShapeDtypeStruct(r.shape, jnp.int8),
+                    "scale": jax.ShapeDtypeStruct(
+                        r.shape[:-1] + (1,) if r.shape else (1,),
+                        jnp.float32)}
+        return jax.ShapeDtypeStruct(r.shape, jnp.float32)
+
+    state = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+             "m": common.tmap(moment, recs),
+             "v": common.tmap(moment, recs)}
+    if optcfg.master_fp32:
+        state["master"] = common.tmap(
+            lambda r: jax.ShapeDtypeStruct(r.shape, jnp.float32), recs)
+    return state
+
+
+def opt_specs(recs, rule, optcfg: OptConfig):
+    def moment(r: common.PRec):
+        spec = common.spec_of(r, rule)
+        if optcfg.quantize_state:
+            scale_spec = P(*(tuple(spec)[:-1] + (None,))) if r.shape else P()
+            return {"q": spec, "scale": scale_spec}
+        return spec
+
+    state = {"step": P(),
+             "m": common.tmap(moment, recs),
+             "v": common.tmap(moment, recs)}
+    if optcfg.master_fp32:
+        state["master"] = common.spec_tree(recs, rule)
+    return state
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: configs.ShapeSpec
+    cfg: configs.ArchConfig
+    model: LM
+    fn: Callable                     # the step function to jit
+    abstract_args: tuple             # ShapeDtypeStructs to lower against
+    in_specs: tuple                  # PartitionSpec pytrees
+    out_specs: Any                   # PartitionSpec pytree (or prefix)
+    rule: dict
+    model_flops_global: float        # MODEL_FLOPS for the whole step
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               tcfg: TrainConfig | None = None,
+               cfg: configs.ArchConfig | None = None) -> Cell:
+    cfg = cfg or configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    if not cfg.supports(shape):
+        raise ValueError(f"{arch} skips {shape_name} "
+                         "(full attention is quadratic; DESIGN.md §4)")
+    model = LM(cfg)
+    rule = rule_for(cfg, shape, multi_pod)
+    recs = model.param_recs()
+    pspecs = common.spec_tree(recs, rule)
+    pabs = common.abstract_tree(recs)
+    bspecs = batch_specs(cfg, shape, rule)
+    babs = configs.input_specs(cfg, shape)
+
+    n_active = cfg.active_param_count()
+    tokens = shape.batch * shape.seq
+
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig(opt=OptConfig(
+            quantize_state=arch in _QUANTIZE_OPT))
+        step_fn = make_train_step(model, tcfg, rule=rule)
+        oabs = opt_abstract(recs, tcfg.opt)
+        ospecs = opt_specs(recs, rule, tcfg.opt)
+        return Cell(
+            arch=arch, shape=shape, cfg=cfg, model=model, fn=step_fn,
+            abstract_args=(pabs, oabs, babs,
+                           jax.ShapeDtypeStruct((), jnp.int32)),
+            in_specs=(pspecs, ospecs, bspecs, P()),
+            out_specs=(pspecs, ospecs, P()),
+            rule=rule, model_flops_global=6.0 * n_active * tokens)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch, caches):
+            return model.prefill(params, batch, caches, rule=rule)
+
+        crecs = model.cache_recs(shape.batch, shape.seq)
+        cabs = common.abstract_tree(crecs)
+        cspecs = common.spec_tree(crecs, rule)
+        return Cell(
+            arch=arch, shape=shape, cfg=cfg, model=model, fn=prefill_fn,
+            abstract_args=(pabs, babs, cabs),
+            in_specs=(pspecs, bspecs, cspecs),
+            out_specs=(P(), cspecs),
+            rule=rule, model_flops_global=2.0 * n_active * tokens)
+
+    # decode (decode_32k / long_500k): one token against a seq-length cache
+    def decode_fn(params, caches, tokens_, pos):
+        return model.decode_step(params, caches, tokens_, pos, rule=rule)
+
+    crecs = model.cache_recs(shape.batch, shape.seq)
+    cabs = common.abstract_tree(crecs)
+    cspecs = common.spec_tree(crecs, rule)
+    return Cell(
+        arch=arch, shape=shape, cfg=cfg, model=model, fn=decode_fn,
+        abstract_args=(pabs, cabs,
+                       jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32),
+                       jax.ShapeDtypeStruct((), jnp.int32)),
+        in_specs=(pspecs, cspecs, P(_batch_axes(rule), None), P()),
+        out_specs=(P(), cspecs),
+        rule=rule, model_flops_global=2.0 * n_active * shape.batch)
+
+
+def shard(mesh, spec_tree_):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree_, is_leaf=lambda x: isinstance(x, P))

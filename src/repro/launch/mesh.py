@@ -1,0 +1,26 @@
+"""Mesh construction. A FUNCTION, not a module-level constant, so importing
+this module never touches jax device state (the dry-run entry point must set
+XLA_FLAGS before the first jax call)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Production meshes: 16x16 = 256 chips/pod; 2 pods = 512 chips.
+
+    Axes are roles (DESIGN.md §5): `data` = DP/FSDP/SP, `model` = TP/EP;
+    `pod` is the outer DP (or pipeline) axis across the slower inter-pod
+    links.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host-platform) devices exist — used by
+    tests and the CPU examples."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

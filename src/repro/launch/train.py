@@ -1,0 +1,56 @@
+"""Training launcher.
+
+Default mode runs a REDUCED config end-to-end on local devices (the CPU
+container): real data pipeline, optimizer, checkpoints, watchdog. The full
+production configs are exercised via the dry-run (launch/dryrun.py), which
+lowers this same step function against the 16x16 / 2x16x16 meshes.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data import SyntheticLM
+from repro.models.lm import LM
+from repro.optim import OptConfig
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=configs.ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log", default=None, help="JSONL metrics path")
+    ap.add_argument("--quantize-opt", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.reduced(configs.get_config(args.arch))
+    model = LM(cfg)
+    data = SyntheticLM(vocab=cfg.vocab, seq=args.seq,
+                       global_batch=args.batch)
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=args.lr, quantize_state=args.quantize_opt),
+        microbatches=args.microbatches,
+        warmup_steps=max(1, args.steps // 10), total_steps=args.steps)
+    trainer = Trainer(model, data, tcfg, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every, log_path=args.log)
+    params, _, step = trainer.run(args.steps, key=jax.random.PRNGKey(0))
+    losses = [m["loss"] for m in trainer.metrics_log if "loss" in m]
+    print(f"[train] {args.arch} reduced: step {step}, "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"stragglers={trainer.watchdog.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060], TPU-adapted: the sequence is split into chunks; within a
+chunk the dual quadratic (attention-like) form runs on the MXU, across
+chunks a `lax.scan` carries the (heads, headdim, state) recurrent state.
+The chunk length is a blocking factor in the layer-condition sense — chosen
+so the chunk working set fits VMEM (see core.blocking / EXPERIMENTS §Perf).
+
+TP: the inner/head dim is sharded over `model`; B/C/state are per-head or
+replicated, so the scan body is collective-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import PRec, constrain, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    chunk: int = 128
+    conv_width: int = 4
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+def mamba2_recs(cfg) -> dict[str, PRec]:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    h = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    conv_ch = din + 2 * gn
+    return {
+        "ln": PRec((d,), ("embed",), init="zeros"),
+        "w_in_zx": PRec((d, 2 * din), ("embed", "inner")),
+        "w_in_bc": PRec((d, 2 * gn), ("embed", None)),
+        "w_in_dt": PRec((d, h), ("embed", "heads")),
+        "dt_bias": PRec((h,), ("heads",), init="zeros"),
+        "conv_w": PRec((s.conv_width, conv_ch), ("conv", "inner"),
+                       scale=s.conv_width ** -0.5),
+        "conv_b": PRec((conv_ch,), ("inner",), init="zeros"),
+        "A_log": PRec((h,), ("heads",), init="zeros"),
+        "D": PRec((h,), ("heads",), init="ones"),
+        "gate_ln": PRec((din,), ("inner",), init="zeros"),
+        "w_out": PRec((din, d), ("inner", "embed"), scale=din ** -0.5),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv, width W. u: (b, s, ch), w: (W, ch).
+    state: (b, W-1, ch) carry for decode. Returns (out, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(u.shape[:1] + (W - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(W)) + b
+    new_state = full[:, -(W - 1):] if W > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def _split_proj(p, xn, s: SSMConfig, d):
+    din = s.d_inner(d)
+    gn = s.n_groups * s.d_state
+    zx = jnp.einsum("bsd,de->bse", xn, p["w_in_zx"])
+    z, xin = zx[..., :din], zx[..., din:]
+    bc = jnp.einsum("bsd,de->bse", xn, p["w_in_bc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xn, p["w_in_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return z, xin, bc, dt, gn
+
+
+def mamba2_apply(p, x, cfg, rule=None, cache=None, pos=None):
+    """Returns (delta_x, new_cache). cache = {'ssm': (b,h,p,n), 'conv': ...}.
+    Training/prefill path uses the chunked SSD scan; decode the one-step
+    recurrence."""
+    s: SSMConfig = cfg.ssm
+    b, L, d = x.shape
+    h, P, N = s.n_heads(d), s.headdim, s.d_state
+    xn = rms_norm(x, p["ln"])
+    z, xin, bc, dt, gn = _split_proj(p, xn, s, d)
+
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        None if cache is None else cache["conv"])
+    xin, bc = conv_out[..., :s.d_inner(d)], conv_out[..., s.d_inner(d):]
+    B = bc[..., :gn].reshape(b, L, s.n_groups, N)[:, :, 0]     # g=1: (b,L,N)
+    C = bc[..., gn:].reshape(b, L, s.n_groups, N)[:, :, 0]
+    xh = xin.reshape(b, L, h, P)
+    if rule is not None:
+        xh = constrain(xh, rule, ("batch", None, "act_heads", None))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (h,)
+    l_t = (A[None, None, :] * dt)                              # (b,L,h) log-decay
+
+    if cache is not None and L == 1:  # ---- decode: one recurrent step ----
+        st = cache["ssm"]                                       # (b,h,P,N)
+        a = jnp.exp(l_t[:, 0]).astype(jnp.float32)              # (b,h)
+        dx = (dt[:, 0][..., None] * xh[:, 0].astype(jnp.float32))  # (b,h,P)
+        st = st * a[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", dx, B[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", st, C[:, 0].astype(jnp.float32))
+        y = y + p["D"].astype(jnp.float32)[:, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, h * P).astype(x.dtype)
+        cache = {"ssm": st, "conv": conv_state}
+    else:  # ---------------- chunked SSD ------------------------------
+        Q = min(s.chunk, L)
+        assert L % Q == 0, (L, Q)
+        nc = L // Q
+        xc = xh.reshape(b, nc, Q, h, P)
+        Bc = B.reshape(b, nc, Q, N)
+        Cc = C.reshape(b, nc, Q, N)
+        dtc = dt.reshape(b, nc, Q, h)
+        lc = l_t.reshape(b, nc, Q, h)
+        Lcum = jnp.cumsum(lc, axis=2)                           # (b,nc,Q,h)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+        def chunk_body(state, args):
+            xq, Bq, Cq, dtq, Lq = args                          # per-chunk
+            # state: (b,h,P,N) carried in fp32
+            scores = jnp.einsum("bln,bmn->blm", Cq, Bq).astype(jnp.float32)
+            gamma = jnp.exp(jnp.clip(Lq[:, :, None, :] - Lq[:, None, :, :],
+                                     -60.0, 0.0))               # (b,l,m,h)
+            gamma = jnp.where(mask[None, :, :, None], gamma, 0.0)
+            M = scores[..., None] * gamma * dtq[:, None, :, :]  # (b,l,m,h)
+            y_intra = jnp.einsum("blmh,bmhp->blhp", M,
+                                 xq.astype(jnp.float32))
+            decay_in = jnp.exp(Lq)                              # (b,l,h)
+            y_inter = jnp.einsum("blh,bln,bhpn->blhp",
+                                 decay_in, Cq.astype(jnp.float32), state)
+            # new chunk state
+            w = dtq * jnp.exp(Lq[:, -1:, :] - Lq)               # (b,l,h)
+            s_chunk = jnp.einsum("blh,blhp,bln->bhpn", w,
+                                 xq.astype(jnp.float32),
+                                 Bq.astype(jnp.float32))
+            state = state * jnp.exp(Lq[:, -1])[..., None, None] + s_chunk
+            return state, (y_intra + y_inter)
+
+        init = (jnp.zeros((b, h, P, N), jnp.float32) if cache is None
+                else cache["ssm"])
+        # move chunk axis first for scan
+        xs = (xc.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1),
+              dtc.swapaxes(0, 1), Lcum.swapaxes(0, 1))
+        final_state, ys = jax.lax.scan(chunk_body, init, xs)
+        y = ys.swapaxes(0, 1).reshape(b, L, h, P)
+        y = y + p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, L, h * P).astype(x.dtype)
+        if cache is not None:
+            cache = {"ssm": final_state, "conv": conv_state}
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["gate_ln"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if rule is not None:
+        out = constrain(out, rule, ("batch", "seq", "act_embed"))
+    return out, cache
+
+
+def mamba2_cache_shape(cfg, batch: int):
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    h, P, N = s.n_heads(d), s.headdim, s.d_state
+    conv_ch = s.d_inner(d) + 2 * s.n_groups * s.d_state
+    return {"ssm": ((batch, h, P, N), jnp.float32),
+            "conv": ((batch, s.conv_width - 1, conv_ch), jnp.bfloat16)}

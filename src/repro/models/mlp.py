@@ -1,0 +1,50 @@
+"""Feed-forward blocks: SwiGLU / GeGLU (gated) and plain GELU (whisper),
+column→row tensor-parallel over the `ff` logical axis."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import PRec, constrain, layer_norm, rms_norm
+
+_ACTS = {"swiglu": jax.nn.silu, "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+         "gelu": lambda x: jax.nn.gelu(x, approximate=True), "relu": jax.nn.relu}
+
+
+def mlp_recs(cfg, d_ff: int | None = None) -> dict[str, PRec]:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    recs = {
+        "w_out": PRec((ff, d), ("ff", "embed"), scale=ff ** -0.5),
+        "ln": PRec((d,), ("embed",), init="zeros"),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        recs["w_gate"] = PRec((d, ff), ("embed", "ff"))
+        recs["w_up"] = PRec((d, ff), ("embed", "ff"))
+    else:
+        recs["w_up"] = PRec((d, ff), ("embed", "ff"))
+        recs["b_up"] = PRec((ff,), ("ff",), init="zeros")
+        recs["b_out"] = PRec((d,), ("embed",), init="zeros")
+    if cfg.norm == "layernorm":
+        recs["ln"] = PRec((d,), ("embed",), init="ones")
+        recs["ln_b"] = PRec((d,), ("embed",), init="zeros")
+    return recs
+
+
+def mlp_apply(p, x, cfg, rule=None):
+    xn = (rms_norm(x, p["ln"]) if cfg.norm == "rmsnorm"
+          else layer_norm(x, p["ln"], p["ln_b"]))
+    act = _ACTS[cfg.act]
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", xn, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", xn, p["w_up"])
+        h = act(g) * u
+    else:
+        h = act(jnp.einsum("bsd,df->bsf", xn, p["w_up"]) + p["b_up"])
+    if rule is not None:
+        h = constrain(h, rule, ("batch", None, "act_ff"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    if "b_out" in p:
+        out = out + p["b_out"]
+    if rule is not None:
+        out = constrain(out, rule, ("batch", "seq", "act_embed"))
+    return out

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN: top-k routing with static capacity (GShard-style
+one-hot dispatch → XLA all-to-all under expert parallelism), shared experts,
+and DeepSeek-V3's aux-loss-free sigmoid routing with a learned bias.
+
+Experts are sharded over the `model` axis (EP); the dispatch/combine einsums
+contract the token dim (sharded over `data`), which XLA lowers to the
+canonical all-to-all + all-reduce pattern of expert parallelism.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import PRec, constrain, rms_norm
+from .mlp import mlp_apply, mlp_recs
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    router: str = "softmax"     # 'softmax' | 'sigmoid_bias' (aux-loss-free)
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+def moe_recs(cfg) -> dict[str, PRec]:
+    m: MoEConfig = cfg.moe
+    d, ff, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    recs = {
+        "router": PRec((d, e), ("embed", None), dtype=jnp.float32),
+        # EP: experts shard over `model`, so the per-expert ff dim stays
+        # unsharded (experts and ff cannot both map to the model axis)
+        "w_gate": PRec((e, d, ff), ("experts", "embed", "eff")),
+        "w_up": PRec((e, d, ff), ("experts", "embed", "eff")),
+        "w_out": PRec((e, ff, d), ("experts", "eff", "embed"),
+                      scale=ff ** -0.5),
+        "ln": PRec((d,), ("embed",), init="zeros"),
+    }
+    if m.router == "sigmoid_bias":
+        recs["router_bias"] = PRec((e,), (None,), init="zeros",
+                                   dtype=jnp.float32)
+    if m.n_shared:
+        recs["shared"] = mlp_recs(cfg, d_ff=m.n_shared * ff)
+    return recs
+
+
+def _topk_mask(scores, k):
+    """scores: (T, E) -> (weights (T,E), mask (T,E))  [k-hot]"""
+    vals, idx = jax.lax.top_k(scores, k)
+    mask = jax.nn.one_hot(idx, scores.shape[-1], dtype=scores.dtype).sum(1)
+    return mask
+
+
+def _route(p, xt, m: MoEConfig):
+    """Router: returns (weights (t, e), khot (t, e), idx (t, k))."""
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    if m.router == "sigmoid_bias":
+        # DeepSeek aux-loss-free: bias only affects selection, not weights
+        sel_scores = jax.nn.sigmoid(logits) + p["router_bias"]
+        gate_scores = jax.nn.sigmoid(logits)
+    else:
+        sel_scores = logits
+        gate_scores = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(sel_scores, m.top_k)
+    khot = jax.nn.one_hot(idx, m.n_experts,
+                          dtype=gate_scores.dtype).sum(1)    # (t, e)
+    weights = gate_scores * khot
+    if m.router == "sigmoid_bias":                            # renormalize
+        weights = weights / (weights.sum(-1, keepdims=True) + 1e-9)
+    return weights, khot, idx
+
+
+def moe_apply(p, x, cfg, rule=None, dispatch: str = "scatter"):
+    """x: (b, s, d). Static-capacity top-k dispatch, canonical GShard
+    group-local form: tokens are split into G groups (one per data shard,
+    ``rule['moe_groups']``), routing positions and capacity are computed
+    *within* the group, dispatch/combine scatters stay group-local, and the
+    (group <-> expert) transpose between the dispatch buffer and the expert
+    FFN is the one true all-to-all of expert parallelism.
+
+    dispatch='scatter' (default): matmul-free dispatch/combine via
+    scatter-add/gather in (token, k) pair space. The classic one-hot einsum
+    dispatch costs 2·t_g·(e·c_g)·d ≈ 2.5·k·t_g²·d MXU flops per group —
+    ~800x the useful expert compute at deepseek-v3 scale when G=1 (t=1M);
+    it is kept (dispatch='einsum') for small configs and the equivalence
+    test (the two paths are numerically identical).
+    """
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    xn = rms_norm(x, p["ln"])
+    t = b * s
+    G = (rule or {}).get("moe_groups", 1)
+    if t % G:
+        G = 1
+    tg = t // G
+    xt = xn.reshape(G, tg, d)
+    weights, khot, idx = _route(p, xt.reshape(t, d), m)
+    weights = weights.reshape(G, tg, m.n_experts)
+    khot = khot.reshape(G, tg, m.n_experts)
+    idx = idx.reshape(G, tg, m.top_k)
+
+    # floor 8: tiny decode groups otherwise drop colliding tokens
+    capacity = max(min(8, tg), int(m.capacity_factor * m.top_k * tg
+                                   / m.n_experts))
+    # position of each token within its expert's group-local buffer
+    pos_te = (jnp.cumsum(khot, axis=1) - khot).astype(jnp.int32)  # (G,tg,e)
+
+    if dispatch == "einsum":
+        keep = (pos_te < capacity) & (khot > 0)
+        disp = jax.nn.one_hot(jnp.where(keep, pos_te, capacity),
+                              capacity, dtype=x.dtype)        # (G,tg,e,c)
+        comb = disp * weights.astype(x.dtype)[..., None]
+        xin = jnp.einsum("gtec,gtd->gecd", disp, xt)
+    else:
+        # scatter dispatch in (token, k) pair space; overflow pairs land in
+        # the per-expert spill slot (index `capacity`), dropped afterwards
+        pos_k = jnp.take_along_axis(pos_te, idx, axis=2)      # (G, tg, k)
+        keep_k = pos_k < capacity
+        pos_k = jnp.where(keep_k, pos_k, capacity)
+        slot = idx * (capacity + 1) + pos_k                   # (G, tg, k)
+        src = jnp.broadcast_to(xt[:, :, None, :], (G, tg, m.top_k, d))
+        zeros = jnp.zeros((G, m.n_experts * (capacity + 1), d), x.dtype)
+        xin = jax.vmap(lambda z, sl, sr: z.at[sl].add(sr))(
+            zeros, slot.reshape(G, tg * m.top_k),
+            src.reshape(G, tg * m.top_k, d))
+        xin = xin.reshape(G, m.n_experts, capacity + 1, d)[:, :, :capacity]
+
+    # (G, e, c, d) -> (e, G, c, d): the EP all-to-all (groups live on the
+    # data axis, experts on the model axis)
+    xin = xin.swapaxes(0, 1)
+    if rule is not None:
+        xin = constrain(xin, rule, ("act_experts", "batch", None, None))
+    gt = jnp.einsum("egcd,edf->egcf", xin, p["w_gate"])
+    u = jnp.einsum("egcd,edf->egcf", xin, p["w_up"])
+    h = jax.nn.silu(gt) * u
+    eout = jnp.einsum("egcf,efd->egcd", h, p["w_out"])
+    if rule is not None:
+        eout = constrain(eout, rule, ("act_experts", "batch", None, None))
+    eout = eout.swapaxes(0, 1)                                # a2a back
+
+    eout = eout.astype(x.dtype)     # combine in bf16: halves the a2a/AR wire
+    if dispatch == "einsum":
+        out = jnp.einsum("gecd,gtec->gtd", eout, comb)
+    else:
+        pad = jnp.zeros((G, m.n_experts, 1, d), eout.dtype)
+        flat = jnp.concatenate([eout, pad], axis=2) \
+            .reshape(G, m.n_experts * (capacity + 1), d)
+        gathered = jnp.take_along_axis(
+            flat, slot.reshape(G, tg * m.top_k)[..., None], axis=1) \
+            .reshape(G, tg, m.top_k, d)
+        w_k = (jnp.take_along_axis(weights, idx, axis=2)
+               * keep_k).astype(x.dtype)                      # (G, tg, k)
+        out = jnp.einsum("gtkd,gtk->gtd", gathered, w_k)
+    out = out.reshape(b, s, d)
+
+    if m.n_shared:
+        out = out + mlp_apply(p["shared"], x, cfg, rule=rule)
+    if rule is not None:
+        out = constrain(out, rule, ("batch", "seq", "act_embed"))
+    return out
+
+
+def load_balance_stats(p, x, cfg):
+    """Router entropy/load diagnostics (for logging; not an aux loss when
+    router='sigmoid_bias' — DeepSeek-V3 trains aux-free)."""
+    m = cfg.moe
+    xt = rms_norm(x, p["ln"]).reshape(-1, cfg.d_model)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    load = probs.mean(0)
+    return {"router_entropy": -(load * jnp.log(load + 1e-9)).sum(),
+            "max_load": load.max() * m.n_experts}

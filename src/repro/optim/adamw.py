@@ -1,0 +1,133 @@
+"""AdamW with fp32 master weights, decoupled weight decay, global-norm
+clipping, and optional **int8 block-quantized optimizer state** (absmax
+linear quantization over the trailing axis, error carried implicitly by
+requantization — the distributed-memory trick that lets deepseek-v3-671b
+train on 512 v5e chips; see EXPERIMENTS.md §Dry-run).
+
+Pure-pytree implementation (no optax in this container); every function is
+jit/pjit-friendly and state shardings follow the parameter shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_fp32: bool = True       # keep an fp32 copy of bf16 params
+    quantize_state: bool = False   # int8 m/v (block absmax over last axis)
+
+
+# ----------------------------------------------------------------------
+# int8 state (de)quantization
+# ----------------------------------------------------------------------
+def _quantize(x: jax.Array, sqrt_domain: bool = False) -> dict:
+    """Symmetric absmax int8 over the trailing axis.
+
+    ``sqrt_domain`` is used for the non-negative second moment: linear
+    absmax rounds small v entries to zero, which sends the Adam update to
+    m/eps and diverges (observed). Quantizing sqrt(v) keeps relative
+    resolution down to (1/127)^2 ~ 6e-5 of the row max.
+    """
+    xf = x.astype(jnp.float32)
+    if sqrt_domain:
+        xf = jnp.sqrt(jnp.maximum(xf, 0.0))
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def _dequantize(d: dict, sqrt_domain: bool = False) -> jax.Array:
+    x = d["q"].astype(jnp.float32) * d["scale"]
+    return jnp.square(x) if sqrt_domain else x
+
+
+def _is_q(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def _moment_zeros(p, quantize: bool):
+    if quantize:
+        return {"q": jnp.zeros(p.shape, jnp.int8),
+                "scale": jnp.full(p.shape[:-1] + (1,) if p.ndim else (1,),
+                                  1e-12, jnp.float32)}
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+# ----------------------------------------------------------------------
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_init(params, cfg: OptConfig):
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(partial(_moment_zeros, quantize=cfg.quantize_state),
+                          params),
+        "v": jax.tree.map(partial(_moment_zeros, quantize=cfg.quantize_state),
+                          params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(grads, params, state, cfg: OptConfig, lr):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12)) \
+        if cfg.clip_norm else 1.0
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    masters = state.get("master", params)
+
+    def upd(g, p_master, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = _dequantize(m) if _is_q(m) else m
+        vf = _dequantize(v, sqrt_domain=True) if _is_q(v) else v
+        mf = cfg.b1 * mf + (1.0 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1.0 - cfg.b2) * jnp.square(g)
+        upd_ = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        # trust cap: bounds the update when quantized v underestimates
+        # (|update| ~ 1 for healthy Adam states; 3 is a generous ceiling)
+        upd_ = jnp.clip(upd_, -3.0, 3.0)
+        pnew = p_master.astype(jnp.float32) * (1.0 - lr * cfg.weight_decay) \
+            - lr * upd_
+        mq = _quantize(mf) if _is_q(m) else mf
+        vq = _quantize(vf, sqrt_domain=True) if _is_q(v) else vf
+        return pnew, mq, vq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(masters)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, p, m, v) for g, p, m, v
+           in zip(flat_g, flat_p, flat_m, flat_v)]
+    new_masters = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    old_dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda pm, dt: pm.astype(dt),
+                              new_masters, old_dtypes)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if "master" in state:
+        new_state["master"] = new_masters
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,15 @@
+"""LR schedules (pure functions of the step, jit-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup_steps: int,
+                    total_steps: int, final_frac: float = 0.1):
+    t = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * t / jnp.maximum(1.0, warmup_steps)
+    prog = jnp.clip((t - warmup_steps)
+                    / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac)
+                     * 0.5 * (1.0 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup_steps, warm, cos)

@@ -1,0 +1,1 @@
+from .engine import Engine, make_caches  # noqa: F401

@@ -1,0 +1,126 @@
+"""Trainer: the fault-tolerant outer loop.
+
+* deterministic data replay (step-indexed synthetic pipeline),
+* periodic **async** sharded checkpoints + resume from the latest step,
+* **watchdog** straggler detection (step time > k x running median flags the
+  step; persistent stragglers trigger a restart-safe snapshot),
+* failure injection hook for tests (`failure_hook(step)` may raise) — the
+  loop restores from the last checkpoint and replays, proving the
+  checkpoint/restart contract end to end.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import statistics
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro import ckpt
+from repro.optim import OptConfig, adamw_init
+from repro.train.step import TrainConfig, make_train_step
+
+
+class Watchdog:
+    """Flags steps slower than ``factor`` x the running median."""
+
+    def __init__(self, factor: float = 3.0, window: int = 50):
+        self.factor, self.window = factor, window
+        self.times: list[float] = []
+        self.straggler_steps: list[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = (len(self.times) >= 5
+                and dt > self.factor * statistics.median(self.times))
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if slow:
+            self.straggler_steps.append(step)
+        return slow
+
+
+class Trainer:
+    def __init__(self, model, data, tcfg: TrainConfig, rule=None,
+                 ckpt_dir: str | None = None, ckpt_every: int = 50,
+                 failure_hook: Callable[[int], None] | None = None,
+                 max_restarts: int = 3, log_path: str | None = None):
+        self.model, self.data, self.tcfg, self.rule = model, data, tcfg, rule
+        self.ckpt_dir = pathlib.Path(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.failure_hook = failure_hook
+        self.max_restarts = max_restarts
+        self.watchdog = Watchdog()
+        self.saver = ckpt.AsyncSaver(self.ckpt_dir) if self.ckpt_dir else None
+        self.log_path = pathlib.Path(log_path) if log_path else None
+        self.step_fn = jax.jit(make_train_step(model, tcfg, rule=rule))
+        self.metrics_log: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def init_state(self, key):
+        from repro.models.common import materialize
+        params = materialize(self.model.param_recs(), key)
+        opt = adamw_init(params, self.tcfg.opt)
+        return params, opt, 0
+
+    def restore_state(self):
+        step = ckpt.latest_step(self.ckpt_dir)
+        if step is None:
+            return None
+        params, opt, _ = self.init_state(jax.random.PRNGKey(0))
+        tree, manifest = ckpt.restore(self.ckpt_dir, step,
+                                      {"params": params, "opt": opt})
+        return tree["params"], tree["opt"], manifest["step"]
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int, key=None, resume: bool = True):
+        state = self.restore_state() if (resume and self.ckpt_dir) else None
+        if state is None:
+            state = self.init_state(
+                jax.random.PRNGKey(0) if key is None else key)
+        params, opt, start = state
+
+        restarts = 0
+        step = start
+        while step < n_steps:
+            try:
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in self.data.batch(step).items()}
+                t0 = time.perf_counter()
+                if self.failure_hook is not None:
+                    self.failure_hook(step)
+                params, opt, metrics = self.step_fn(params, opt, batch, step)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                slow = self.watchdog.observe(step, dt)
+                rec = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                rec.update(step=step, dt=dt, straggler=slow)
+                self.metrics_log.append(rec)
+                if self.log_path:
+                    with open(self.log_path, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+                step += 1
+                if self.saver and (step % self.ckpt_every == 0
+                                   or step == n_steps):
+                    self.saver.submit(step, {"params": params, "opt": opt},
+                                      extra={"step": step})
+            except RuntimeError as e:   # injected node failure
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                if self.saver:
+                    self.saver.wait()
+                state = self.restore_state()
+                if state is None:
+                    params, opt, step = *self.init_state(
+                        jax.random.PRNGKey(0))[:2], 0
+                else:
+                    params, opt, step = state
+                self.metrics_log.append(
+                    {"step": step, "event": "restart", "error": str(e)})
+        if self.saver:
+            self.saver.wait()
+        return params, opt, step

@@ -1,0 +1,85 @@
+"""Arch-config registry: exact assigned configs, analytic parameter counts
+vs published sizes, shape-grid applicability."""
+import pytest
+
+from repro import configs
+
+PUBLISHED_B = {   # (total params 1e9, tolerance fraction)
+    "llama4-maverick-400b-a17b": (400, 0.05),
+    "deepseek-v3-671b": (671, 0.02),
+    "mamba2-2.7b": (2.7, 0.05),
+    "pixtral-12b": (12, 0.05),
+    "zamba2-7b": (7, 0.12),
+    "granite-8b": (8, 0.08),
+    "qwen1.5-110b": (110, 0.05),
+    "phi3-mini-3.8b": (3.8, 0.05),
+    "gemma-7b": (8.5, 0.05),      # gemma-7b is 8.54B actual
+    "whisper-small": (0.25, 0.15),
+}
+
+
+def test_registry_complete():
+    assert len(configs.ARCH_IDS) == 10
+    for a in configs.ARCH_IDS:
+        cfg = configs.get_config(a)
+        assert cfg.name == a
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_param_counts_match_published(arch):
+    cfg = configs.get_config(arch)
+    n = cfg.param_count() / 1e9
+    want, tol = PUBLISHED_B[arch]
+    assert abs(n - want) / want < tol, f"{arch}: {n:.2f}B vs {want}B"
+
+
+def test_active_params():
+    l4 = configs.get_config("llama4-maverick-400b-a17b")
+    assert abs(l4.active_param_count() / 1e9 - 17) < 1.0
+    ds = configs.get_config("deepseek-v3-671b")
+    assert abs(ds.active_param_count() / 1e9 - 37) < 1.5
+
+
+def test_assigned_exact_dims():
+    ds = configs.get_config("deepseek-v3-671b")
+    assert (ds.n_layers, ds.d_model, ds.n_heads, ds.vocab) == \
+        (61, 7168, 128, 129280)
+    assert ds.moe.n_experts == 256 and ds.moe.top_k == 8
+    q = configs.get_config("qwen1.5-110b")
+    assert (q.n_layers, q.d_model, q.d_ff, q.vocab) == \
+        (80, 8192, 49152, 152064) and q.qkv_bias
+    g = configs.get_config("gemma-7b")
+    assert g.head_dim == 256 and g.act == "geglu" and g.emb_scale
+    m = configs.get_config("mamba2-2.7b")
+    assert m.ssm.d_state == 128 and m.d_ff == 0
+
+
+def test_long_context_grid():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    runs = {a for a, s in configs.cells() if s == "long_500k"}
+    assert runs == {"mamba2-2.7b", "zamba2-7b", "llama4-maverick-400b-a17b"}
+    # total cells: 10 archs x 3 shapes + 3 long = 33
+    assert len(configs.cells()) == 33
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_reduced_is_family_preserving(arch):
+    cfg = configs.get_config(arch)
+    red = configs.reduced(cfg)
+    assert red.family == cfg.family
+    assert bool(red.moe) == bool(cfg.moe)
+    assert bool(red.mla) == bool(cfg.mla)
+    assert bool(red.ssm) == bool(cfg.ssm)
+    assert red.encdec == cfg.encdec
+    assert (red.local_window > 0) == (cfg.local_window > 0)
+    assert red.param_count() < 5e6
+
+
+def test_input_specs_shapes():
+    cfg = configs.get_config("pixtral-12b")
+    sp = configs.input_specs(cfg, "train_4k")
+    assert sp["tokens"].shape == (256, 4096)
+    assert sp["patch_embeds"].shape == (256, 256, 5120)
+    dec = configs.input_specs(cfg, "decode_32k")
+    assert dec["tokens"].shape == (128, 1)
+    assert "patch_embeds" not in dec

@@ -1,0 +1,244 @@
+"""Unit + property tests for the modeling engine (parser, LC, cache sim,
+blocking advisor). Paper-number validation lives in test_paper_numbers.py."""
+import pathlib
+
+import pytest
+import sympy
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (blocking, cachesim, ecm, layer_conditions,
+                        load_machine, parse_kernel)
+from repro.core.c_parser import ParseError
+from repro.core.kernel_ir import FlopCount, make_stencil
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+
+@pytest.fixture(scope="module")
+def ivy():
+    return load_machine("IVY")
+
+
+@pytest.fixture(scope="module")
+def longrange_src():
+    return (STENCILS / "stencil_3d_long_range.c").read_text()
+
+
+# ----------------------------------------------------------------------
+class TestParser:
+    def test_listing1_verbatim(self):
+        src = (STENCILS / "stencil_3d7pt.c").read_text()
+        k = parse_kernel(src)
+        assert set(k.arrays) == {"a", "b"}
+        assert len(k.loops) == 3
+        assert [str(l.var) for l in k.loops] == ["k", "j", "i"]
+        assert len(k.reads()) == 7 and len(k.writes()) == 1
+        assert k.stream_counts() == (1, 1, 0)
+
+    def test_flattened_index(self):
+        src = """
+        double a[M*N]; double b[M*N];
+        for (int j = 1; j < M - 1; j++) {
+          for (int i = 1; i < N - 1; i++) {
+            b[j*N+i] = a[j*N+i-1] + a[j*N+i+1] + a[(j-1)*N+i] + a[(j+1)*N+i];
+          }
+        }"""
+        k = parse_kernel(src, constants={"M": 100, "N": 100})
+        assert len(k.reads()) == 4
+        offs = sorted(int(a.offset().subs(k.subs()).subs({sympy.Symbol("i"): 0,
+                                                          sympy.Symbol("j"): 0}))
+                      for a in k.reads())
+        assert offs == [-100, -1, 1, 100]
+
+    def test_step_two(self):
+        src = """
+        double a[N]; double b[N];
+        for (int i = 0; i < N; i+=2) { b[i] = a[i]; }"""
+        k = parse_kernel(src, constants={"N": 64})
+        assert k.inner_loop.step == 2
+
+    def test_rejects_if(self):
+        src = """
+        double a[N];
+        for (int i = 0; i < N; i++) { if (i) { a[i] = 0; } }"""
+        with pytest.raises(ParseError):
+            parse_kernel(src)
+
+    def test_rejects_undeclared_array(self):
+        src = """
+        double a[N];
+        for (int i = 0; i < N; i++) { a[i] = q[i]; }"""
+        with pytest.raises(ParseError):
+            parse_kernel(src)
+
+    def test_dedupes_repeated_refs(self, longrange_src):
+        k = parse_kernel(longrange_src)
+        # V[k][j][i] appears twice in the source but is one load
+        v_reads = [a for a in k.reads() if a.array.name == "V"]
+        assert len(v_reads) == 25
+
+
+# ----------------------------------------------------------------------
+class TestCacheSim:
+    def test_sim_matches_lc_steady_state(self, longrange_src, ivy):
+        k = parse_kernel(longrange_src, constants={"M": 130, "N": 1015})
+        res = cachesim.simulate(k, ivy, warmup_rows=3, measure_rows=2)
+        lc = layer_conditions.volumes_per_level(k, ivy)
+        for lvl in ("L1", "L2"):
+            assert res.total_bytes_per_it(lvl) == pytest.approx(
+                lc[lvl].total_bytes_per_it, rel=0.05)
+
+    def test_l1_thrashing_at_1792(self, longrange_src, ivy):
+        """Paper Fig. 3: N = 1792 = 7*256 thrashes L1 (rows map to 2 sets).
+        LC cannot see this; the simulator must."""
+        k_bad = parse_kernel(longrange_src, constants={"M": 130, "N": 1792})
+        k_ok = parse_kernel(longrange_src, constants={"M": 130, "N": 1744})
+        bad = cachesim.simulate(k_bad, ivy, warmup_rows=2, measure_rows=1)
+        ok = cachesim.simulate(k_ok, ivy, warmup_rows=2, measure_rows=1)
+        assert bad.total_bytes_per_it("L1") > 1.5 * ok.total_bytes_per_it("L1")
+        lc = layer_conditions.analyze(k_bad, ivy.level("L1").size_bytes)
+        # LC stays smooth (Fig. 4): same volume as at any other N
+        assert lc.total_bytes_per_it * 8 == pytest.approx(20 * 64)
+
+    def test_3d_condition_in_small_cache(self, ivy):
+        """With a cache large enough for the 3D condition, steady-state
+        misses drop to the streaming minimum (first-touch + write-back)."""
+        src = (STENCILS / "stencil_3d7pt.c").read_text()
+        k = parse_kernel(src, constants={"M": 30, "N": 30})
+        # 3D condition requires ~ 6*N^2*8B = 43 kB -> fits L2 (256 kB)
+        res = cachesim.simulate(k, ivy, warmup_rows=40, measure_rows=4)
+        # a: 1 streaming miss; b: 1 write-allocate miss + 1 write-back
+        assert res.total_bytes_per_it("L2") * 8 == pytest.approx(3 * 64, rel=0.35)
+
+    def test_inclusive_hierarchy_invariant(self, longrange_src, ivy):
+        k = parse_kernel(longrange_src, constants={"M": 60, "N": 200})
+        res = cachesim.simulate(k, ivy, warmup_rows=2, measure_rows=2)
+        # misses cannot increase down the hierarchy
+        assert res.per_level["L1"].misses >= res.per_level["L2"].misses
+        assert res.per_level["L2"].misses >= res.per_level["L3"].misses
+
+    def test_policies_run(self, ivy):
+        import dataclasses
+        src = (STENCILS / "stencil_2d5pt.c").read_text()
+        k = parse_kernel(src, constants={"M": 100, "N": 100})
+        for pol in ("LRU", "FIFO", "RR"):
+            levels = [dataclasses.replace(l, replacement_policy=pol)
+                      for l in ivy.levels]
+            m = dataclasses.replace(ivy, levels=tuple(levels))
+            res = cachesim.simulate(k, m, warmup_rows=2, measure_rows=1)
+            assert res.per_level["L1"].misses > 0
+
+
+# ----------------------------------------------------------------------
+# Property tests (hypothesis)
+# ----------------------------------------------------------------------
+@st.composite
+def star_stencil(draw):
+    radius = draw(st.integers(1, 3))
+    n = draw(st.integers(16 * radius + 2, 400))
+    return radius, n
+
+
+class TestProperties:
+    @given(star_stencil())
+    @settings(max_examples=15, deadline=None)
+    def test_lc_misses_monotone_in_cache_size(self, rn):
+        radius, n = rn
+        k = _make_star2d(radius, n)
+        sizes = [512, 8 * 1024, 256 * 1024, 16 * 1024 * 1024]
+        misses = [layer_conditions.analyze(k, s).misses for s in sizes]
+        assert misses == sorted(misses, reverse=True)
+
+    @given(star_stencil())
+    @settings(max_examples=10, deadline=None)
+    def test_lc_creq_formula_consistency(self, rn):
+        """C_req evaluated at the chosen threshold never exceeds the cache."""
+        radius, n = rn
+        k = _make_star2d(radius, n)
+        for size in (4 * 1024, 64 * 1024, 1 << 20):
+            stt = layer_conditions.analyze(k, size)
+            if stt.threshold != -1:
+                assert stt.c_req_bytes <= size
+
+    @given(star_stencil())
+    @settings(max_examples=6, deadline=None)
+    def test_sim_agrees_with_lc_away_from_transitions(self, rn):
+        """On random star stencils, SIM and LC agree on L1 traffic within
+        15% when N is not near an LC transition or a power-of-two pathology."""
+        radius, n = rn
+        ivy = load_machine("IVY")
+        # keep clear of associativity pathologies: odd N
+        n |= 1
+        k = _make_star2d(radius, n)
+        lc = layer_conditions.analyze(k, ivy.level("L1").size_bytes)
+        near = any(abs(n - t.max_value) < 8 for t in
+                   layer_conditions.transition_points(
+                       k, ivy.level("L1").size_bytes, "N"))
+        if near:
+            return
+        sim = cachesim.simulate(k, ivy, warmup_rows=3, measure_rows=2)
+        assert sim.total_bytes_per_it("L1") == pytest.approx(
+            lc.total_bytes_per_it, rel=0.15, abs=8)
+
+    @given(st.integers(64, 4096), st.integers(64, 4096), st.integers(64, 8192))
+    @settings(max_examples=25, deadline=None)
+    def test_matmul_tiles_fit_vmem(self, m, n, k):
+        v5e = load_machine("V5E")
+        t = blocking.matmul_tiles(m, n, k, 2, v5e.vmem_bytes)
+        assert t.vmem_bytes <= v5e.vmem_bytes * 0.5 + 1
+        assert t.bn % 128 == 0 and t.bk % 128 == 0
+
+    @given(st.integers(128, 1 << 19), st.integers(128, 1 << 19),
+           st.sampled_from([64, 128, 256]))
+    @settings(max_examples=25, deadline=None)
+    def test_attention_tiles_fit_vmem(self, sq, skv, d):
+        v5e = load_machine("V5E")
+        t = blocking.attention_tiles(sq, skv, d, 2, v5e.vmem_bytes)
+        assert t.vmem_bytes <= v5e.vmem_bytes * 0.4 + 1
+        assert t.bq >= 8 and t.bkv >= 128
+
+
+def _make_star2d(radius: int, n: int):
+    reads = [("a", "j", f"i+{c}") for c in range(-radius, radius + 1)]
+    reads += [("a", f"j+{c}", "i") for c in range(-radius, radius + 1) if c]
+    pts = len(reads)
+    return make_stencil(
+        "star2d", {"a": ("M", "N"), "b": ("M", "N")},
+        [("j", radius, f"M-{radius}"), ("i", radius, f"N-{radius}")],
+        reads=reads, writes=[("b", "j", "i")],
+        flops=FlopCount(add=pts - 1, mul=1),
+        constants={"M": 4 * radius + 6, "N": n})
+
+
+# ----------------------------------------------------------------------
+class TestBlocking:
+    def test_longrange_l3_blocking(self, ivy):
+        """Blocking the long-range stencil so the 3D condition survives in
+        L3: the advisor must return ~546 (paper's transition) at full size
+        and scale with cache budget."""
+        src = (STENCILS / "stencil_3d_long_range.c").read_text()
+        k = parse_kernel(src, constants={"M": 130, "N": 1015})
+        b_full = blocking.lc_block_size(k, ivy.level("L3").size_bytes, "N",
+                                        safety=1.0)
+        assert b_full == pytest.approx(546, abs=2)
+        b_half = blocking.lc_block_size(k, ivy.level("L3").size_bytes, "N",
+                                        safety=0.5)
+        assert b_half < b_full
+
+    def test_stencil_blocks_fit(self):
+        v5e = load_machine("V5E")
+        b = blocking.stencil_blocks(4, (128, 1024, 1024), n_arrays=3,
+                                    elem_bytes=4, vmem_bytes=v5e.vmem_bytes)
+        assert b.vmem_bytes <= v5e.vmem_bytes * 0.5
+        assert b.bi % 128 == 0 and b.bj % 8 == 0
+
+
+# ----------------------------------------------------------------------
+class TestECMPredictorParity:
+    def test_sim_and_lc_same_ecm(self, longrange_src, ivy):
+        k = parse_kernel(longrange_src, constants={"M": 130, "N": 1015})
+        e_lc = ecm.model(k, ivy, predictor="LC")
+        e_sim = ecm.model(k, ivy, predictor="SIM",
+                          sim_kwargs=dict(warmup_rows=3, measure_rows=2))
+        assert e_sim.t_ecm == pytest.approx(e_lc.t_ecm, rel=0.07)

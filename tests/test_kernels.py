@@ -1,0 +1,102 @@
+"""Pallas kernels (interpret mode) vs the pure-jnp oracles in ref.py:
+shape/dtype sweeps + hypothesis property sweeps (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocking
+from repro.kernels import flash_attention, longrange3d, ref, stencil3d7pt
+
+COEFFS = dict(W=0.1, E=0.2, N=0.3, S=0.15, F=0.25, B=0.05, s=-1.0)
+CVEC = [COEFFS[c] for c in "WENSFB"] + [COEFFS["s"]]
+
+
+@pytest.mark.parametrize("shape", [(6, 16, 16), (12, 40, 40), (3, 9, 9),
+                                   (20, 8, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_stencil7pt_sweep(shape, dtype):
+    a = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    out = stencil3d7pt(a, CVEC)
+    np.testing.assert_allclose(out, ref.stencil3d7pt(a, COEFFS),
+                               rtol=2e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(10, 16, 16), (14, 24, 24), (9, 40, 40)])
+def test_longrange_sweep(shape):
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(key, shape, jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), shape, jnp.float32)
+    roc = jax.random.normal(jax.random.fold_in(key, 2), shape,
+                            jnp.float32) * 0.1
+    c = jnp.array([0.5, 0.1, 0.05, 0.02, 0.01], jnp.float32)
+    out = longrange3d(u, v, roc, c)
+    np.testing.assert_allclose(out, ref.longrange3d(u, v, roc, c),
+                               rtol=2e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(3, 10), n=st.integers(3, 24))
+def test_stencil7pt_property(m, n):
+    """Property: kernel == oracle for arbitrary (M, N, N); boundary
+    untouched."""
+    a = jax.random.normal(jax.random.PRNGKey(m * 31 + n), (m, n, n),
+                          jnp.float32)
+    out = stencil3d7pt(a, CVEC)
+    np.testing.assert_allclose(out, ref.stencil3d7pt(a, COEFFS),
+                               rtol=2e-5, atol=1e-6)
+    np.testing.assert_array_equal(out[0], a[0])       # k boundary copied
+    np.testing.assert_array_equal(out[:, 0], a[:, 0])
+
+
+@pytest.mark.parametrize("b,h,sq,skv,d", [
+    (2, 4, 256, 256, 64), (1, 2, 128, 512, 64),
+    (1, 1, 512, 512, 128), (2, 2, 256, 256, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, sq, skv, d, causal, dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, h, sq, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, skv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, skv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal)
+    want = ref.attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_decode_offset():
+    """decode: 1 query against a long kv prefix (q_offset = skv - 1)."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 2, 8, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 512, 64),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 512, 64),
+                          jnp.float32)
+    out = flash_attention(q, k, v, causal=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+
+def test_blocking_advisor_fits_vmem():
+    """Property: advisor tiles always fit the budget (paper §2.4.2 applied
+    to VMEM)."""
+    vmem = 128 * 2**20
+    for sq in (1024, 8192, 32768):
+        t = blocking.attention_tiles(sq, sq, 128, 2, vmem)
+        assert t.vmem_bytes <= 0.4 * vmem
+        assert t.bq % 8 == 0 and t.bkv % 128 == 0
+    for n in (512, 1015, 4096):
+        b = blocking.stencil_blocks(4, (128, n, n), 3, 8, vmem)
+        assert b.vmem_bytes <= 0.5 * vmem
+
+
+def test_vmem_guard_raises():
+    """ops.py refuses plane sizes whose LC working set exceeds VMEM."""
+    a = jnp.zeros((3, 8, 8), jnp.float32)
+    stencil3d7pt(a, CVEC)     # small: fine
+    big = jax.ShapeDtypeStruct((3, 9000, 9000), jnp.float32)
+    with pytest.raises(ValueError):
+        stencil3d7pt(jnp.zeros(big.shape, big.dtype), CVEC)

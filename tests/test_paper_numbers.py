@@ -1,0 +1,170 @@
+"""Validation against the paper's published numbers.
+
+The primary artifact is the §3 case study (Listing 4/5, Figs 3-5): the
+long-range stencil on Ivy Bridge EP. The §1.2 walk-through numbers are also
+checked where self-consistent (see EXPERIMENTS.md for the two documented
+inconsistencies in the paper's own §1.2 example).
+"""
+import math
+import pathlib
+
+import pytest
+
+from repro.core import (ecm, incore, layer_conditions, load_machine,
+                        parse_kernel, roofline, reports)
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+
+@pytest.fixture(scope="module")
+def longrange():
+    src = (STENCILS / "stencil_3d_long_range.c").read_text()
+    return parse_kernel(src, name="3d-long-range",
+                        constants={"M": 130, "N": 1015})
+
+
+@pytest.fixture(scope="module")
+def stencil7pt():
+    src = (STENCILS / "stencil_3d7pt.c").read_text()
+    return parse_kernel(src, name="3d-7pt", constants={"M": 500, "N": 1000})
+
+
+@pytest.fixture(scope="module")
+def ivy():
+    return load_machine("IVY")
+
+
+# ----------------------------------------------------------------------
+# Listing 4: ECM analysis of the long-range stencil, -D M 130 -D N 1015
+# ----------------------------------------------------------------------
+class TestListing4ECM:
+    def test_flop_count(self, longrange):
+        # 25-pt star: 13 muls + 2 for the update; 26 adds/subs
+        assert longrange.flops.mul == 15
+        assert longrange.flops.add == 26
+        assert longrange.flops.total == 41
+
+    def test_in_core(self, longrange, ivy):
+        ic = incore.analyze_x86(longrange, ivy)
+        assert ic.t_ol == pytest.approx(52.0)     # paper: 52.0 cy (ADD port)
+        assert ic.t_nol == pytest.approx(54.0)    # paper: 54.0 cy (27 loads)
+
+    def test_ecm_notation(self, longrange, ivy):
+        res = ecm.model(longrange, ivy, predictor="LC")
+        contribs = [c for _, c in res.contributions]
+        assert contribs[0] == pytest.approx(40.0)            # L1-L2
+        assert contribs[1] == pytest.approx(24.0)            # L2-L3
+        assert contribs[2] == pytest.approx(48.5, rel=0.02)  # L3-MEM
+        assert res.t_ecm == pytest.approx(166.5, rel=0.02)
+        assert "52.0 || 54.0 | 40.0 | 24.0" in res.notation()
+
+    def test_saturation_at_4_cores(self, longrange, ivy):
+        res = ecm.model(longrange, ivy, predictor="LC")
+        assert res.saturation_cores == 4          # paper: "saturating at 4"
+
+    def test_scaling_plateau(self, longrange, ivy):
+        # Fig. 5: perfect scaling to n_s, then constant at the bandwidth limit
+        res = ecm.model(longrange, ivy, predictor="LC")
+        curve = res.scaling_curve(10)
+        assert curve[1] == pytest.approx(2 * curve[0], rel=1e-6)
+        assert curve[9] == pytest.approx(curve[4], rel=1e-6)
+        sat_perf = res.flops_per_unit / res.t_mem * ivy.clock_hz
+        assert curve[-1] == pytest.approx(sat_perf, rel=1e-6)
+
+
+# ----------------------------------------------------------------------
+# Listing 4: RooflineIACA analysis
+# ----------------------------------------------------------------------
+class TestListing4Roofline:
+    def test_levels(self, longrange, ivy):
+        res = roofline.model(longrange, ivy, predictor="LC", variant="IACA")
+        # paper: CPU 18.22 GF/s; L2 0.26 F/B -> 17.52; L3 0.43 -> 16.57;
+        #        MEM 0.43 -> 7.65 GF/s with the copy kernel bandwidths
+        assert res.core_performance == pytest.approx(18.22e9, rel=0.01)
+        by = {l.level: l for l in res.levels}
+        assert by["L2"].arithmetic_intensity == pytest.approx(0.256, abs=0.01)
+        assert by["L2"].performance == pytest.approx(17.52e9, rel=0.01)
+        assert by["L3"].performance == pytest.approx(16.57e9, rel=0.01)
+        assert by["MEM"].arithmetic_intensity == pytest.approx(0.427, abs=0.01)
+        assert by["MEM"].performance == pytest.approx(7.65e9, rel=0.01)
+        assert res.bottleneck == "MEM"
+        assert res.performance == pytest.approx(7.65e9, rel=0.01)
+
+    def test_report_renders(self, longrange, ivy):
+        res = roofline.model(longrange, ivy, predictor="LC", variant="IACA")
+        txt = reports.roofline_report(res)
+        assert "MEM" in txt and "GFLOP/s" in txt
+
+
+# ----------------------------------------------------------------------
+# Listing 5 / Figs 3-4: layer-condition transition points
+# ----------------------------------------------------------------------
+class TestListing5LayerConditions:
+    def test_l3_3d_transition_at_546(self, longrange, ivy):
+        trans = layer_conditions.transition_points(
+            longrange, ivy.level("L3").size_bytes, "N")
+        # the strongest (3D) condition: paper reports N = 546
+        t3d = trans[-1]
+        assert math.ceil(t3d.max_value) == 546
+
+    def test_l1_volume_20cl(self, longrange, ivy):
+        st = layer_conditions.analyze(longrange, ivy.level("L1").size_bytes)
+        # 19 load misses + 1 write-back per iteration = 20 CL per 8 it
+        assert st.misses == 19
+        assert st.writeback_lines == 1
+        assert st.total_bytes_per_it * 8 == pytest.approx(20 * 64)
+
+    def test_l2_l3_volume_12cl(self, longrange, ivy):
+        for lvl in ("L2", "L3"):
+            st = layer_conditions.analyze(longrange, ivy.level(lvl).size_bytes)
+            assert st.misses == 11
+            assert st.total_bytes_per_it * 8 == pytest.approx(12 * 64)
+
+    def test_2d5pt_worked_example(self, ivy):
+        # paper §2.4.2: C_req = 4N-2 elements, 3 hits, 2 misses at t = N-1
+        src = (STENCILS / "stencil_2d5pt.c").read_text()
+        k = parse_kernel(src, constants={"M": 4000, "N": 4000})
+        # cache just big enough for the t=N-1 condition: 32N-16 bytes + b
+        import sympy
+        N = 4000
+        st = layer_conditions.analyze(k, cache_bytes=(4 * N - 2) * 8)
+        # paper: C_hits = 3, C_misses = 2 (a's first touch + b's stream)
+        assert st.hits == 3
+        assert st.misses == 2
+        assert st.per_array_misses == {"a": 1, "b": 1}
+        # C_req = 4N-2 elements = 32N-16 bytes, exactly the quoted formula
+        assert st.c_req_bytes == pytest.approx((4 * N - 2) * 8)
+
+
+# ----------------------------------------------------------------------
+# §1.2 walk-through (illustrative numbers, IVY122 parameter set)
+# ----------------------------------------------------------------------
+class Test122Example:
+    def test_roofline_times_from_quoted_volumes(self):
+        # Table 1 quoted volumes & bandwidths -> times for 8 iterations
+        ivy122 = load_machine("IVY122")
+        clock = ivy122.clock_hz
+        # T_k = beta_k / B_k: 448B/137.1GB/s, 384B/68.4, 320B/38.8, 192B/17.9
+        assert 448 / 137.1e9 * clock == pytest.approx(9.8, abs=0.1)
+        assert 384 / 68.4e9 * clock == pytest.approx(16.8, abs=0.3)   # paper 16.6
+        assert 320 / 38.8e9 * clock == pytest.approx(24.7, abs=0.1)
+        assert 192 / 17.9e9 * clock == pytest.approx(32.2, abs=0.1)
+
+    def test_ecm_data_terms_from_quoted_volumes(self):
+        # {13.2 || 7 | 14 | 10 | 9.1}: 448B L1 loads at 64B/cy; 7 CL * 2cy;
+        # 5 CL * 2cy; 3 CL to memory at 63.4 GB/s & 3 Gcy/s
+        ivy122 = load_machine("IVY122")
+        assert 448 / ivy122.load_bytes_per_cycle == pytest.approx(7.0)
+        assert 7 * 2 == 14 and 5 * 2 == 10
+        t_mem = 3 * 64 * ivy122.clock_hz / ivy122.main_memory_bandwidth
+        assert t_mem == pytest.approx(9.1, abs=0.05)
+
+    def test_7pt_memory_bottleneck(self, stencil7pt):
+        # With the §1.2 machine, the 7-pt stencil is MEM bound (paper: the
+        # dominating bottleneck is T_MEM)
+        ivy122 = load_machine("IVY122")
+        res = roofline.model(stencil7pt, ivy122, predictor="LC", variant="IACA")
+        assert res.bottleneck == "MEM"
+        assert stencil7pt.flops.add == 6  # 7-pt: 6 adds
+        assert stencil7pt.flops.mul == 7  # 7 muls (incl. center coefficient)
