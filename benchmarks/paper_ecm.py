@@ -1,9 +1,10 @@
 """Paper §1.2.2: ECM notation for the 3D-7pt stencil on IVY(§1.2 params):
 {13.2 || 7 | 14 | 10 | 9.1} cy/CL, and the Roofline/ECM comparison of
-Fig. 1."""
+Fig. 1.  Both models run through one AnalysisSession, sharing the LC
+volumes and in-core analysis."""
 import pathlib
 
-from repro.core import ecm, load_machine, parse_kernel, roofline
+from repro.core import AnalysisSession, load_machine, parse_kernel
 
 STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
     "src" / "repro" / "configs" / "stencils"
@@ -13,8 +14,9 @@ def run() -> str:
     m = load_machine("IVY122")
     k = parse_kernel((STENCILS / "stencil_3d7pt.c").read_text(),
                      constants={"M": 300, "N": 700})
-    e = ecm.model(k, m, predictor="LC")
-    r = roofline.model(k, m, predictor="LC", variant="IACA")
+    sess = AnalysisSession(m, predictor="LC")
+    e = sess.analyze(k, "ecm")
+    r = sess.analyze(k, "roofline-iaca")
     perf = e.performance_flops(cores=1)
     lines = [
         f"ECM notation        : {e.notation()}",

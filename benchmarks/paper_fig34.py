@@ -1,10 +1,14 @@
 """Paper Figs 3/4: single-core N-sweep of the long-range stencil with both
 cache predictors. The LC curve is smooth with the L3 3D->2D step at N=546;
 the simulator additionally reproduces the L1-thrashing spike at
-N = 1792 = 7*256 (associativity pathology invisible to LC)."""
+N = 1792 = 7*256 (associativity pathology invisible to LC).
+
+The whole sweep runs through one AnalysisSession: points shared between
+the LC and SIM passes reuse their in-core analysis, and re-running the
+benchmark inside one process is a pure cache hit."""
 import pathlib
 
-from repro.core import ecm, load_machine, parse_kernel
+from repro.core import AnalysisSession, load_machine, parse_kernel
 
 STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
     "src" / "repro" / "configs" / "stencils"
@@ -22,11 +26,12 @@ def _kernel(n):
 
 def run(fast: bool = True) -> str:
     m = load_machine("IVY")
+    sess = AnalysisSession(m, sim_kwargs={"warmup_rows": 2,
+                                          "measure_rows": 1})
     lines = ["   N | T_ECM(LC) cy/8it | MLUP/s(LC) | T_ECM(SIM) | note"]
     sim_points = SWEEP_SIM[:3] if fast else SWEEP_SIM
     for n in SWEEP_LC:
-        k = _kernel(n)
-        e = ecm.model(k, m, predictor="LC")
+        e = sess.analyze(_kernel(n), "ecm", predictor="LC")
         mlups = 8 / (e.t_ecm / m.clock_hz) / 1e6
         note = ""
         if n in (540, 560):
@@ -35,10 +40,7 @@ def run(fast: bool = True) -> str:
                      f"            | {note}")
     lines.append("-- simulator points (associativity-aware) --")
     for n in sim_points:
-        k = _kernel(n)
-        e = ecm.model(k, m, predictor="SIM",
-                      sim_kwargs={"warmup_rows": 2, "measure_rows": 1})
-        mlups = 8 / (e.t_ecm / m.clock_hz) / 1e6
+        e = sess.analyze(_kernel(n), "ecm", predictor="SIM")
         note = "L1 thrash (7*256)" if n == 1792 else ""
         lines.append(f"{n:5d} |                  |            | "
                      f"{e.t_ecm:8.1f}   | {note}")

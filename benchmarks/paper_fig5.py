@@ -3,7 +3,7 @@
 (4 cores), constant at the bandwidth limit beyond."""
 import pathlib
 
-from repro.core import ecm, load_machine, parse_kernel
+from repro.core import analyze, load_machine, parse_kernel
 
 STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
     "src" / "repro" / "configs" / "stencils"
@@ -13,7 +13,7 @@ def run() -> str:
     m = load_machine("IVY")
     k = parse_kernel((STENCILS / "stencil_3d_long_range.c").read_text(),
                      name="3d-long-range", constants={"M": 132, "N": 1015})
-    e = ecm.model(k, m, predictor="LC")
+    e = analyze("ecm", k, m, predictor="LC")
     curve = e.scaling_curve(10)
     lines = [f"predicted saturation point: n_s = {e.saturation_cores} cores "
              "(paper: 4)",

@@ -1,8 +1,10 @@
 """Paper Listing 4: the kerncraft CLI analysis of the long-range stencil
-(-D M 130 -D N 1015, IVY machine) — ECM + RooflineIACA, both predictors."""
+(-D M 130 -D N 1015, IVY machine) — ECM + RooflineIACA, both predictors,
+routed through the model registry and one memoizing AnalysisSession (the
+RooflineIACA pass reuses the ECM pass's LC volumes and in-core result)."""
 import pathlib
 
-from repro.core import ecm, load_machine, parse_kernel, reports, roofline
+from repro.core import AnalysisSession, load_machine, parse_kernel, reports
 
 STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
     "src" / "repro" / "configs" / "stencils"
@@ -12,13 +14,14 @@ def run() -> str:
     m = load_machine("IVY")
     k = parse_kernel((STENCILS / "stencil_3d_long_range.c").read_text(),
                      name="3d-long-range", constants={"M": 130, "N": 1015})
+    sess = AnalysisSession(m, sim_kwargs={"warmup_rows": 2,
+                                          "measure_rows": 1})
     out = [f"{k.name}.c   -D M 130 -D N 1015"]
     for pred in ("LC", "SIM"):
-        e = ecm.model(k, m, predictor=pred,
-                      sim_kwargs={"warmup_rows": 2, "measure_rows": 1})
+        e = sess.analyze(k, "ecm", predictor=pred)
         out.append(f"--- ECM ({pred}) " + "-" * 40)
         out.append(reports.ecm_report(e))
-    r = roofline.model(k, m, predictor="LC", variant="IACA")
+    r = sess.analyze(k, "roofline-iaca", predictor="LC")
     out.append(reports.roofline_report(r))
     out.append("paper: { 52.0 || 54.0 | 40.0 | 24.0 | 48.5 } cy/CL, "
                "saturating at 4 cores; MEM 7.65 GFLOP/s @ 0.43 FLOP/B")

@@ -1,14 +1,18 @@
 """Benchmark harness: one section per paper table/figure (deliverable d)
-plus the TPU-adaptation and dry-run roofline sections.
+plus the TPU-adaptation, dry-run roofline, and AnalysisSession sections.
+All model evaluations route through the MODEL_REGISTRY / AnalysisSession
+layer (DESIGN.md §4-5).
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
-"""
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
+
+``--smoke`` runs the fast registry-driven subset (used by
+scripts/verify.sh; finishes well under a minute)."""
 import argparse
 import time
 
 from benchmarks import (kernels_bench, paper_ecm, paper_fig5, paper_fig34,
                         paper_listing4, paper_listing5, paper_table1,
-                        roofline_table, tpu_ecm)
+                        roofline_table, session_cache, tpu_ecm)
 
 SECTIONS = [
     ("Paper Table 1 — 3D-7pt Roofline volumes & times", paper_table1.run),
@@ -19,6 +23,7 @@ SECTIONS = [
      paper_listing5.run),
     ("Paper Figs 3/4 — N-sweep, LC vs cache simulator", paper_fig34.run),
     ("Paper Fig 5 — strong scaling & saturation point", paper_fig5.run),
+    ("AnalysisSession — memoized sweep micro-benchmark", session_cache.run),
     ("TPU adaptation — v5e ECM/Roofline for the Pallas kernels",
      tpu_ecm.run),
     ("Pallas kernels — interpret timing + v5e predictions",
@@ -26,14 +31,25 @@ SECTIONS = [
     ("§Roofline — dry-run artifacts table", roofline_table.run),
 ]
 
+# fast subset exercising the registry/session layer end to end (<60 s)
+SMOKE = [
+    ("Paper Table 1 — 3D-7pt Roofline volumes & times", paper_table1.run),
+    ("Paper §1.2.2 — ECM notation for 3D-7pt", paper_ecm.run),
+    ("Paper Fig 5 — strong scaling & saturation point", paper_fig5.run),
+    ("AnalysisSession — memoized sweep micro-benchmark",
+     lambda: session_cache.run(points=20)),
+]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="run the slow cache-simulator sweep points too")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast registry/session subset (CI smoke)")
     args = ap.parse_args()
     t00 = time.perf_counter()
-    for title, fn in SECTIONS:
+    for title, fn in (SMOKE if args.smoke else SECTIONS):
         print("=" * 72)
         print(title)
         print("=" * 72)

@@ -1,0 +1,61 @@
+"""AnalysisSession micro-benchmark: the memoization speedup on a repeated
+layer-condition blocking sweep (DESIGN.md §5).
+
+A blocking search evaluates the model at many candidate sizes, and callers
+(auto-tuners, services) re-issue overlapping sweeps constantly.  This
+benchmark measures a ``points``-point ECM N-sweep of the 3D-7pt stencil on
+IVY three ways:
+
+  uncached  — ``ecm.model()`` per point, the pre-session code path
+  cold      — first pass through one AnalysisSession (fills the cache)
+  warm      — the identical sweep repeated on the same session
+
+and reports the warm/uncached speedup (the acceptance bar is >= 5x; in
+practice the warm sweep is pure dict lookups and lands orders of magnitude
+above it).
+"""
+import pathlib
+import time
+
+from repro.core import AnalysisSession, ecm, load_machine, parse_kernel
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+
+def run(points: int = 100) -> str:
+    ivy = load_machine("IVY")
+    k = parse_kernel((STENCILS / "stencil_3d7pt.c").read_text(),
+                     name="3d-7pt", constants={"M": 300, "N": 700})
+    values = [100 + 5 * i for i in range(points)]
+
+    t0 = time.perf_counter()
+    for n in values:
+        ecm.model(k.bind(N=n), ivy, predictor="LC")
+    t_uncached = time.perf_counter() - t0
+
+    sess = AnalysisSession(ivy, predictor="LC")
+    t0 = time.perf_counter()
+    sess.sweep(k, "N", values, models=["ecm"])
+    t_cold = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sess.sweep(k, "N", values, models=["ecm"])
+    t_warm = time.perf_counter() - t0
+
+    speedup = t_uncached / t_warm if t_warm > 0 else float("inf")
+    lines = [
+        f"{points}-point ECM blocking sweep (3d-7pt, IVY, LC predictor):",
+        f"  uncached (ecm.model per point) : {t_uncached*1e3:9.1f} ms",
+        f"  session, cold (cache fill)     : {t_cold*1e3:9.1f} ms",
+        f"  session, warm (repeat sweep)   : {t_warm*1e3:9.1f} ms",
+        f"  warm speedup vs uncached       : {speedup:9.0f}x "
+        f"(acceptance: >= 5x)",
+        f"  cache stats: {sess.stats}",
+    ]
+    assert speedup >= 5, f"session cache speedup {speedup:.1f}x below 5x"
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(run())

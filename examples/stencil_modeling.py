@@ -1,5 +1,6 @@
 """The paper's §3 case study end to end (Listings 4 & 5, Figs 3-5): model
-the long-range stencil on IVY with both predictors, print transition points
+the long-range stencil on IVY with both predictors through the unified
+model registry and one memoizing AnalysisSession, print transition points
 and the scaling curve, then run the TPU-adapted analysis and the Pallas
 kernel for the same stencil.
 
@@ -11,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ecm, load_machine, parse_kernel, reports
+from repro.core import AnalysisSession, load_machine, parse_kernel, reports
+
 from repro.kernels import longrange3d, ref
 
 STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
@@ -21,12 +23,12 @@ src = (STENCILS / "stencil_3d_long_range.c").read_text()
 kernel = parse_kernel(src, name="3d-long-range",
                       constants={"M": 130, "N": 1015})
 ivy = load_machine("IVY")
+sess = AnalysisSession(ivy, sim_kwargs={"warmup_rows": 2, "measure_rows": 1})
 
 print("=== kerncraft -p ECM -p RooflineIACA 3d-long-range.c -m IVY "
       "-D M 130 -D N 1015 ===")
 for pred in ("LC", "SIM"):
-    res = ecm.model(kernel, ivy, predictor=pred,
-                    sim_kwargs={"warmup_rows": 2, "measure_rows": 1})
+    res = sess.analyze(kernel, "ecm", predictor=pred)
     print(f"[{pred}] {res.notation()}  -> saturating at "
           f"{res.saturation_cores} cores")
 
@@ -34,9 +36,14 @@ print()
 print(reports.lc_report(kernel, ivy, symbol="N"))
 
 print("\n=== scaling (paper Fig 5) ===")
-res = ecm.model(kernel, ivy, predictor="LC")
+res = sess.analyze(kernel, "ecm", predictor="LC")   # session cache hit
 for c, p in enumerate(res.scaling_curve(8), 1):
     print(f"  {c} cores: {p/1e9:6.2f} GFLOP/s")
+
+print("\n=== machine-readable result (Result.to_dict round-trip) ===")
+rt = reports.from_json(reports.to_json(res))
+print(f"t_ecm={rt.t_ecm:.1f} cy/CL, saturation={rt.saturation_cores} cores "
+      f"(rebuilt from JSON)")
 
 print("\n=== the same stencil as a Pallas TPU kernel ===")
 shape = (12, 64, 64)

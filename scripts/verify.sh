@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full pytest suite plus a fast smoke of the
+# benchmark harness through the MODEL_REGISTRY / AnalysisSession layer.
+#
+#   ./scripts/verify.sh            # tests + <60 s benchmark smoke
+#   ./scripts/verify.sh --tests    # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--tests" ]]; then
+  echo
+  echo "== benchmark smoke (registry/session; <60 s) =="
+  timeout 120 python -m benchmarks.run --smoke
+fi
+
+echo
+echo "verify: OK"

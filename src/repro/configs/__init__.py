@@ -58,6 +58,7 @@ class ArchConfig:
     n_enc_layers: int = 0
     enc_len: int = 0               # encoder sequence length (whisper: 1500)
     mtp: bool = False              # deepseek multi-token-prediction head
+    act_dtype: str = "bfloat16"    # activation/KV-cache dtype
     n_img_tokens: int = 0          # pixtral: stubbed patch-embedding count
     zero_inference: bool = False   # shard weights over `data` when serving
     source: str = ""
@@ -185,14 +186,24 @@ def reduced(cfg: ArchConfig) -> ArchConfig:
     else:
         kw.update(n_layers=2)
     if cfg.moe:
+        # capacity_factor = E/k makes the reduced configs route droplessly:
+        # static-capacity drops depend on the number of tokens in the call,
+        # which would break the prefill/decode == forward parity tests.
         kw["moe"] = dataclasses.replace(cfg.moe, n_experts=4,
                                         top_k=min(cfg.moe.top_k, 2),
                                         d_ff_expert=128,
-                                        n_shared=min(cfg.moe.n_shared, 1))
+                                        n_shared=min(cfg.moe.n_shared, 1),
+                                        capacity_factor=4 / min(
+                                            cfg.moe.top_k, 2))
     if cfg.mla:
         kw["mla"] = MLAConfig(q_lora=64, kv_lora=32, qk_nope_dim=32,
                               qk_rope_dim=16, v_dim=32)
-        kw.update(n_heads=4, n_kv_heads=4, head_dim=32)
+        # fp32 activations: MLA decode uses the absorbed contraction order,
+        # whose bf16 rounding drift vs the expanded prefill/train form flips
+        # argmax near-ties in the parity tests; fp32 keeps the two forms
+        # within ~1e-5 of each other.
+        kw.update(n_heads=4, n_kv_heads=4, head_dim=32,
+                  act_dtype="float32")
     if cfg.ssm:
         kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, headdim=16,
                                         chunk=16)

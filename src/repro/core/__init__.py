@@ -2,9 +2,20 @@
 # (Roofline, ECM, layer conditions, cache simulation, in-core port model,
 # blocking-factor prediction), retargeted from x86 caches to the TPU
 # VREG<-VMEM<-HBM(<-ICI) hierarchy. See DESIGN.md §2-3.
+#
+# Layering (DESIGN.md §4-5): predictors.py owns the LC/SIM dispatch,
+# model_api.py the PerformanceModel registry, session.py the memoizing
+# AnalysisSession every sweep and report runs through.
 from . import (blocking, c_parser, cachesim, ecm, incore, kernel_ir,
-               layer_conditions, machine, roofline)  # noqa: F401
+               layer_conditions, machine, model_api, predictors, reports,
+               roofline, session)  # noqa: F401
 
 from .c_parser import parse_kernel  # noqa: F401
 from .kernel_ir import FlopCount, LoopKernel  # noqa: F401
 from .machine import Machine, load as load_machine  # noqa: F401
+from .model_api import (MODEL_REGISTRY, PerformanceModel,  # noqa: F401
+                        analyze, resolve_model)
+from .predictors import (PREDICTOR_REGISTRY, CachePredictor,  # noqa: F401
+                         VolumePrediction, predict_volumes,
+                         resolve_predictor)
+from .session import AnalysisSession  # noqa: F401

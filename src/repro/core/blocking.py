@@ -17,6 +17,8 @@ import sympy
 
 from . import layer_conditions
 from .kernel_ir import LoopKernel
+from .machine import Machine
+from .session import AnalysisSession
 
 LANE = 128     # TPU lane count: last dim of a VMEM tile
 SUBLANE = 8    # penultimate dim granule (fp32)
@@ -38,6 +40,38 @@ def lc_block_size(kernel: LoopKernel, cache_bytes: float, symbol: str = "N",
         if tr.max_value > 1:
             return int(tr.max_value)
     return 0
+
+
+def blocking_sweep(kernel: LoopKernel, machine: Machine, symbol: str = "N",
+                   values=None, models=("ecm",),
+                   session: AnalysisSession | None = None,
+                   safety: float = 0.5, **opts):
+    """Evaluate registered models across candidate blocking factors.
+
+    Candidates default to the per-level LC blocking factors (and their
+    halves) from :func:`lc_block_size`.  All points run through one
+    :class:`AnalysisSession`, so the models share predictor volumes; pass
+    a ``session`` (bound to the same ``machine``) to make repeated sweeps
+    — e.g. while tuning ``safety`` — cache hits across calls too.
+
+    Returns ``(values, {model: [result per value]})``.
+    """
+    if session is not None and session.machine.name != machine.name:
+        raise ValueError(
+            f"session is bound to machine {session.machine.name!r}, "
+            f"but blocking_sweep was given {machine.name!r}")
+    sess = session or AnalysisSession(machine)
+    if values is None:
+        cands: set[int] = set()
+        for lv in machine.levels:
+            b = lc_block_size(kernel, lv.size_bytes, symbol, safety=safety)
+            if 0 < b < (1 << 30):
+                cands.add(b)
+                cands.add(max(1, b // 2))
+        values = sorted(cands) or [int(kernel.constants.get(symbol, LANE))]
+    values = list(values)       # materialize: generators must survive sweep
+    results = sess.sweep(kernel, symbol, values, models=models, **opts)
+    return values, results
 
 
 def _round_down(v: int, granule: int) -> int:

@@ -13,10 +13,11 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from . import incore, layer_conditions
-from .cachesim import simulate
+from . import incore
+from .incore import InCoreResult
 from .kernel_ir import LoopKernel
 from .machine import Machine
+from .predictors import VolumePrediction, predict_volumes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +77,35 @@ class ECMResult:
     def scaling_curve(self, max_cores: int) -> list[float]:
         return [self.performance_flops(n) for n in range(1, max_cores + 1)]
 
+    # --- machine-readable output (DESIGN.md §4) -----------------------
+    def to_dict(self) -> dict:
+        """JSON-serializable form; primary fields plus derived summaries."""
+        return {
+            "model": "ecm",
+            "unit_iterations": self.unit_iterations,
+            "t_ol": self.t_ol,
+            "t_nol": self.t_nol,
+            "contributions": [[n, c] for n, c in self.contributions],
+            "overlapped": [[n, c] for n, c in self.overlapped],
+            "flops_per_unit": self.flops_per_unit,
+            "clock_hz": self.clock_hz,
+            # derived, for consumers that only read the dict:
+            "t_data": self.t_data,
+            "t_ecm": self.t_ecm,
+            "saturation_cores": self.saturation_cores,
+            "notation": self.notation(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ECMResult":
+        return cls(unit_iterations=int(d["unit_iterations"]),
+                   t_ol=float(d["t_ol"]), t_nol=float(d["t_nol"]),
+                   contributions=[(str(n), float(c))
+                                  for n, c in d["contributions"]],
+                   overlapped=[(str(n), float(c)) for n, c in d["overlapped"]],
+                   flops_per_unit=float(d["flops_per_unit"]),
+                   clock_hz=float(d["clock_hz"]))
+
 
 def _data_terms(kernel: LoopKernel, machine: Machine, volumes_bpi: dict[str, float],
                 unit: int) -> tuple[list[tuple[str, float]], list[tuple[str, float]]]:
@@ -96,26 +126,24 @@ def _data_terms(kernel: LoopKernel, machine: Machine, volumes_bpi: dict[str, flo
 
 
 def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
-          cores: int = 1, sim_kwargs: dict | None = None) -> ECMResult:
+          cores: int = 1, sim_kwargs: dict | None = None,
+          volumes: VolumePrediction | None = None,
+          incore_result: InCoreResult | None = None) -> ECMResult:
     """Build the full ECM model: in-core + cache prediction + data terms.
 
-    ``predictor``: 'LC' (layer conditions) or 'SIM' (cache simulation),
-    mirroring the paper's ``--cache-predictor`` switch.
+    ``predictor`` names a registered :class:`~repro.core.predictors
+    .CachePredictor` ('LC' or 'SIM'), mirroring the paper's
+    ``--cache-predictor`` switch.  A precomputed ``volumes`` prediction
+    and/or ``incore_result`` (e.g. from an
+    :class:`~repro.core.session.AnalysisSession`) short-circuits the
+    corresponding analysis so sweeps and multi-model reports share work.
     """
     unit = kernel.iterations_per_cacheline(machine.cacheline_bytes)
-    ic = incore.analyze_x86(kernel, machine)
-    volumes: dict[str, float] = {}
-    if predictor.upper() == "LC":
-        states = layer_conditions.volumes_per_level(kernel, machine, cores=cores)
-        for name, st in states.items():
-            volumes[name] = st.total_bytes_per_it
-    elif predictor.upper() == "SIM":
-        res = simulate(kernel, machine, **(sim_kwargs or {}))
-        for name in machine.level_names:
-            volumes[name] = res.total_bytes_per_it(name)
-    else:
-        raise ValueError(f"unknown predictor {predictor!r}")
-    serial, overl = _data_terms(kernel, machine, volumes, unit)
+    ic = incore_result or incore.analyze_x86(kernel, machine)
+    if volumes is None:
+        volumes = predict_volumes(kernel, machine, predictor, cores=cores,
+                                  sim_kwargs=sim_kwargs)
+    serial, overl = _data_terms(kernel, machine, volumes.bytes_per_it, unit)
     return ECMResult(unit_iterations=unit, t_ol=ic.t_ol, t_nol=ic.t_nol,
                      contributions=serial, overlapped=overl,
                      flops_per_unit=ic.flops_per_unit, clock_hz=machine.clock_hz)

@@ -1,0 +1,109 @@
+"""Unified performance-model API (DESIGN.md §4).
+
+The paper's CLI exposes a family of interchangeable models (``-p ECM``,
+``-p Roofline``, ``-p RooflineIACA``) over interchangeable cache predictors
+(``--cache-predictor LC|SIM``).  This module gives that family one abstract
+interface — the shape DaCe's kerncraft integration and the CARM tool both
+converged on — so reports, sweeps, and serving layers can iterate over
+models by name:
+
+    result = model_api.analyze("ecm", kernel, machine, predictor="LC")
+    result.to_dict()                       # machine-readable, JSON-safe
+
+Every concrete model registers itself in :data:`MODEL_REGISTRY`; the
+memoizing :class:`~repro.core.session.AnalysisSession` resolves names
+through :func:`resolve_model` and feeds models precomputed predictor
+volumes and in-core results so nothing is recomputed across a sweep.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Protocol, runtime_checkable
+
+from . import ecm as _ecm
+from . import roofline as _roofline
+from .kernel_ir import LoopKernel
+from .machine import Machine
+
+
+@runtime_checkable
+class Result(Protocol):
+    """Minimal contract every model result satisfies."""
+
+    def to_dict(self) -> dict: ...
+
+
+class PerformanceModel(abc.ABC):
+    """One analytic performance model over a :class:`LoopKernel`.
+
+    ``analyze`` accepts the uniform option set (``predictor``, ``cores``,
+    ``sim_kwargs``) plus the shared-work shortcuts ``volumes`` and
+    ``incore_result``; concrete models forward them to their module-level
+    ``model()`` functions, which remain usable directly.
+    """
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def analyze(self, kernel: LoopKernel, machine: Machine, **opts) -> Result:
+        ...
+
+
+MODEL_REGISTRY: dict[str, PerformanceModel] = {}
+
+
+def register_model(cls: type[PerformanceModel]) -> type[PerformanceModel]:
+    MODEL_REGISTRY[cls.name.lower()] = cls()
+    return cls
+
+
+@register_model
+class ECMModel(PerformanceModel):
+    """Execution-Cache-Memory model (paper §1.2.2, §3.2)."""
+
+    name = "ecm"
+
+    def analyze(self, kernel: LoopKernel, machine: Machine,
+                **opts) -> _ecm.ECMResult:
+        return _ecm.model(kernel, machine, **opts)
+
+
+@register_model
+class RooflineModel(PerformanceModel):
+    """Classic Roofline: P_max from the flops/cy table (paper §1.2.1)."""
+
+    name = "roofline"
+    variant = "classic"
+
+    def analyze(self, kernel: LoopKernel, machine: Machine,
+                **opts) -> _roofline.RooflineResult:
+        if "variant" in opts:
+            raise ValueError(
+                "the roofline variant is selected by registry name "
+                "('roofline' = classic, 'roofline-iaca' = port model), "
+                "not by a variant= option")
+        return _roofline.model(kernel, machine, variant=self.variant, **opts)
+
+
+@register_model
+class RooflineIACAModel(RooflineModel):
+    """Roofline with the in-core port model as the compute bound (§2.5)."""
+
+    name = "roofline-iaca"
+    variant = "IACA"
+
+
+def resolve_model(name: str) -> PerformanceModel:
+    try:
+        return MODEL_REGISTRY[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown performance model {name!r}; "
+            f"available: {sorted(MODEL_REGISTRY)}") from None
+
+
+def analyze(model: str, kernel: LoopKernel, machine: Machine,
+            **opts) -> Result:
+    """Resolve ``model`` by registry name and run it — the functional entry
+    point used by benchmarks and examples."""
+    return resolve_model(model).analyze(kernel, machine, **opts)

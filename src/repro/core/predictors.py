@@ -1,0 +1,130 @@
+"""Cache-predictor layer (DESIGN.md §3): one registry owning the paper's
+``--cache-predictor`` switch.
+
+Both performance models consume the same input — the traffic β_k between
+adjacent memory levels — but the paper offers two ways to predict it:
+layer conditions (analytic, fast, associativity-blind) and the cache
+simulator (slow, associativity-aware).  This module is the only place that
+dispatch lives; :mod:`repro.core.ecm` and :mod:`repro.core.roofline` receive
+a finished :class:`VolumePrediction` and never branch on the predictor name.
+
+New predictors register themselves with :func:`register_predictor`; models,
+the :class:`~repro.core.session.AnalysisSession`, and the CLI-style
+benchmarks all resolve them by name through :func:`resolve_predictor`.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+
+from . import layer_conditions
+from .cachesim import simulate
+from .kernel_ir import LoopKernel
+from .machine import Machine
+
+
+@dataclasses.dataclass(frozen=True)
+class VolumePrediction:
+    """Per-level traffic prediction: β_k in bytes per innermost iteration.
+
+    ``bytes_per_it[level]`` is the traffic between ``level`` and the next
+    farther one (load misses + write-backs), the common input of ECM and
+    Roofline.  ``detail`` keeps the predictor-specific evidence (the
+    per-level :class:`~repro.core.layer_conditions.LCState` map for LC, the
+    :class:`~repro.core.cachesim.SimResult` for SIM) for reports.
+    """
+    predictor: str
+    bytes_per_it: dict[str, float]
+    detail: object = None
+
+    def volume(self, level: str) -> float:
+        return self.bytes_per_it.get(level, 0.0)
+
+    def to_dict(self) -> dict:
+        return {"predictor": self.predictor,
+                "bytes_per_it": dict(self.bytes_per_it)}
+
+
+class CachePredictor(abc.ABC):
+    """One prediction backend for per-level cache traffic.
+
+    ``uses_sim_kwargs`` declares whether the backend consumes the
+    simulation options the CLI calls ``sim_kwargs`` (warm-up/measure
+    windows, seeds); analytic predictors leave it False and never see
+    them.
+    """
+
+    name: str = "?"
+    uses_sim_kwargs: bool = False
+
+    @abc.abstractmethod
+    def predict(self, kernel: LoopKernel, machine: Machine, cores: int = 1,
+                **kwargs) -> VolumePrediction:
+        ...
+
+
+PREDICTOR_REGISTRY: dict[str, CachePredictor] = {}
+
+
+def register_predictor(cls: type[CachePredictor]) -> type[CachePredictor]:
+    PREDICTOR_REGISTRY[cls.name.upper()] = cls()
+    return cls
+
+
+@register_predictor
+class LayerConditionPredictor(CachePredictor):
+    """Analytic LC prediction (paper §2.4.2) — smooth in the loop sizes."""
+
+    name = "LC"
+
+    def predict(self, kernel: LoopKernel, machine: Machine, cores: int = 1,
+                **kwargs) -> VolumePrediction:
+        states = layer_conditions.volumes_per_level(kernel, machine,
+                                                    cores=cores)
+        return VolumePrediction(
+            predictor=self.name,
+            bytes_per_it={k: st.total_bytes_per_it for k, st in states.items()},
+            detail=states)
+
+
+@register_predictor
+class CacheSimulationPredictor(CachePredictor):
+    """Set-associative simulation (paper §2.4.1) — sees real set indices.
+
+    Extra keyword arguments (``warmup_rows``, ``measure_rows``, ``seed``)
+    are forwarded to :func:`repro.core.cachesim.simulate`.
+    """
+
+    name = "SIM"
+    uses_sim_kwargs = True
+
+    def predict(self, kernel: LoopKernel, machine: Machine, cores: int = 1,
+                **kwargs) -> VolumePrediction:
+        res = simulate(kernel, machine, **kwargs)
+        return VolumePrediction(
+            predictor=self.name,
+            bytes_per_it={n: res.total_bytes_per_it(n)
+                          for n in machine.level_names},
+            detail=res)
+
+
+def resolve_predictor(name: str) -> CachePredictor:
+    try:
+        return PREDICTOR_REGISTRY[name.upper()]
+    except KeyError:
+        raise ValueError(
+            f"unknown cache predictor {name!r}; "
+            f"available: {sorted(PREDICTOR_REGISTRY)}") from None
+
+
+def predict_volumes(kernel: LoopKernel, machine: Machine,
+                    predictor: str = "LC", cores: int = 1,
+                    sim_kwargs: dict | None = None) -> VolumePrediction:
+    """The one entry point for β_k prediction (the paper's
+    ``--cache-predictor`` switch).  ``sim_kwargs`` only reaches backends
+    declaring ``uses_sim_kwargs`` (SIM), mirroring the CLI semantics where
+    the analytic predictor has no simulation options.
+    """
+    pred = resolve_predictor(predictor)
+    kwargs = dict(sim_kwargs or {}) if pred.uses_sim_kwargs else {}
+    return pred.predict(kernel, machine, cores=cores, **kwargs)

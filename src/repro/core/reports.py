@@ -1,5 +1,8 @@
-"""CLI-style reports mirroring the paper's Listings 4 and 5."""
+"""CLI-style reports mirroring the paper's Listings 4 and 5, plus the
+machine-readable JSON round-trip every result supports (DESIGN.md §4)."""
 from __future__ import annotations
+
+import json
 
 from . import layer_conditions
 from .ecm import ECMResult
@@ -38,6 +41,39 @@ def roofline_report(res: RooflineResult, cores: int = 1) -> str:
         lines.append(f"Arithmetic Intensity: "
                      f"{res.levels[-1].arithmetic_intensity:.2f} FLOP/B")
     return "\n".join(lines)
+
+
+# ----------------------------------------------------------------------
+# Machine-readable output: JSON round-trip for every model result
+# ----------------------------------------------------------------------
+
+def to_json(res: ECMResult | RooflineResult) -> str:
+    """Serialize any model result through its ``to_dict()``."""
+    return json.dumps(res.to_dict(), indent=2, sort_keys=True)
+
+
+def result_from_dict(d: dict) -> ECMResult | RooflineResult:
+    """Rebuild a result object from its ``to_dict()`` form (the ``model``
+    field dispatches, matching MODEL_REGISTRY names)."""
+    model = d.get("model", "")
+    if model == "ecm":
+        return ECMResult.from_dict(d)
+    if model.startswith("roofline"):
+        return RooflineResult.from_dict(d)
+    raise ValueError(f"cannot rebuild result for model {model!r}")
+
+
+def from_json(s: str) -> ECMResult | RooflineResult:
+    return result_from_dict(json.loads(s))
+
+
+def json_report(res: ECMResult | RooflineResult) -> str:
+    """Render the human report from a JSON round-trip of the result — the
+    serialized form must carry everything the text reports need."""
+    rebuilt = from_json(to_json(res))
+    if isinstance(rebuilt, ECMResult):
+        return ecm_report(rebuilt)
+    return roofline_report(rebuilt)
 
 
 def lc_report(kernel: LoopKernel, machine: Machine, symbol: str = "N") -> str:

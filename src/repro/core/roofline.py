@@ -17,10 +17,11 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from . import incore, layer_conditions
-from .cachesim import simulate
+from . import incore
+from .incore import InCoreResult
 from .kernel_ir import LoopKernel
 from .machine import Machine
+from .predictors import VolumePrediction, predict_volumes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +42,7 @@ class RooflineResult:
     levels: list[RooflineLevel]
     flops_per_unit: float
     clock_hz: float
+    variant: str = "IACA"         # which in-core bound produced t_core
 
     @property
     def bottleneck(self) -> str:
@@ -58,16 +60,54 @@ class RooflineResult:
     def time_cy(self) -> float:
         return max([self.t_core] + [l.time_cy_per_unit for l in self.levels])
 
+    # --- machine-readable output (DESIGN.md §4) -----------------------
+    def to_dict(self) -> dict:
+        """JSON-serializable form; primary fields plus derived summaries.
+        ``model`` carries the registry name so re-dispatching from the
+        serialized record reproduces the same in-core bound."""
+        return {
+            "model": ("roofline-iaca" if self.variant.upper() == "IACA"
+                      else "roofline"),
+            "unit_iterations": self.unit_iterations,
+            "t_core": self.t_core,
+            "core_performance": self.core_performance,
+            "levels": [dataclasses.asdict(l) for l in self.levels],
+            "flops_per_unit": self.flops_per_unit,
+            "clock_hz": self.clock_hz,
+            # derived, for consumers that only read the dict:
+            "bottleneck": self.bottleneck,
+            "performance": self.performance,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RooflineResult":
+        return cls(unit_iterations=int(d["unit_iterations"]),
+                   t_core=float(d["t_core"]),
+                   core_performance=float(d["core_performance"]),
+                   levels=[RooflineLevel(**l) for l in d["levels"]],
+                   flops_per_unit=float(d["flops_per_unit"]),
+                   clock_hz=float(d["clock_hz"]),
+                   variant=("IACA" if d.get("model") == "roofline-iaca"
+                            else "classic"))
+
 
 def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
           variant: str = "IACA", cores: int = 1,
-          sim_kwargs: dict | None = None) -> RooflineResult:
+          sim_kwargs: dict | None = None,
+          volumes: VolumePrediction | None = None,
+          incore_result: InCoreResult | None = None) -> RooflineResult:
+    """Roofline model; ``predictor`` names a registered cache predictor.
+
+    Like :func:`repro.core.ecm.model`, precomputed ``volumes`` /
+    ``incore_result`` (from an AnalysisSession) skip the corresponding
+    analyses.
+    """
     unit = kernel.iterations_per_cacheline(machine.cacheline_bytes)
     flops_unit = kernel.flops.total * unit
 
     # ---- in-core bound -------------------------------------------------
     if variant.upper() == "IACA":
-        ic = incore.analyze_x86(kernel, machine)
+        ic = incore_result or incore.analyze_x86(kernel, machine)
         t_core = ic.t_core
         core_perf = (flops_unit / t_core * machine.clock_hz
                      if t_core > 0 else math.inf)
@@ -77,20 +117,16 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
         t_core = flops_unit / pmax if pmax else 0.0
 
     # ---- per-level transfer bounds --------------------------------------
-    volumes: dict[str, float] = {}
-    if predictor.upper() == "LC":
-        states = layer_conditions.volumes_per_level(kernel, machine, cores=cores)
-        volumes = {k: st.total_bytes_per_it for k, st in states.items()}
-    else:
-        res = simulate(kernel, machine, **(sim_kwargs or {}))
-        volumes = {k: res.total_bytes_per_it(k) for k in machine.level_names}
+    if volumes is None:
+        volumes = predict_volumes(kernel, machine, predictor, cores=cores,
+                                  sim_kwargs=sim_kwargs)
 
     r, w, rw = kernel.stream_counts()
     levels: list[RooflineLevel] = []
     names = machine.level_names
     flops_it = kernel.flops.total
     for i, lv in enumerate(machine.levels):
-        vol_it = volumes.get(lv.name, 0.0)
+        vol_it = volumes.volume(lv.name)
         # traffic out of level i feeds the roofline entry of the *next* level
         label = names[i + 1] if i + 1 < len(names) else "MEM"
         try:
@@ -118,4 +154,6 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
             pass
     return RooflineResult(unit_iterations=unit, t_core=t_core,
                           core_performance=core_perf, levels=levels,
-                          flops_per_unit=flops_unit, clock_hz=machine.clock_hz)
+                          flops_per_unit=flops_unit, clock_hz=machine.clock_hz,
+                          variant=("IACA" if variant.upper() == "IACA"
+                                   else "classic"))

@@ -1,0 +1,229 @@
+"""Memoizing analysis session (DESIGN.md §5).
+
+Blocking sweeps, multi-model reports, and any high-traffic analysis service
+evaluate the same kernel at many parameter points and under several models.
+The expensive pieces — sympy-heavy layer conditions, the cache simulator,
+the in-core port model — depend only on ``(kernel, machine, predictor,
+opts)``, so an :class:`AnalysisSession` caches all three tiers:
+
+  1. in-core analysis        (keyed by kernel)
+  2. predictor volumes       (keyed by kernel × predictor × cores × opts)
+  3. full model results      (keyed by model × kernel × predictor × opts)
+
+and exposes a batch API::
+
+    sess = AnalysisSession(machine)
+    results = sess.sweep(kernel, "N", range(100, 1100, 10),
+                         models=["ecm", "roofline-iaca"])
+
+Within a sweep the ECM and Roofline models share each point's predictor
+volumes and in-core result instead of recomputing them; repeating a sweep
+(or re-analyzing any kernel the session has seen) is a pure cache hit.
+
+A session is bound to one machine.  Keys are structural — two kernels with
+the same loops, accesses, and bound constants share cache entries no matter
+how they were constructed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import incore
+from .incore import InCoreResult
+from .kernel_ir import LoopKernel
+from .machine import Machine
+from .model_api import Result, resolve_model
+from .predictors import VolumePrediction, predict_volumes
+
+
+# Stringifying sympy expressions dominates key construction, and
+# ``kernel.bind()`` shallow-copies — bound variants share the same loops /
+# accesses containers — so those sub-keys are cached by container identity.
+# Entries hold a reference to the container, which both validates the id
+# and prevents it from being garbage-collected and reused.  The cache is
+# bounded: long-running services parse fresh kernels per request, so past
+# the cap the oldest (insertion-order) entries are evicted — a re-derived
+# key is just a slower cache hit, never a correctness issue.
+_STRUCT_KEYS: dict[int, tuple] = {}
+_STRUCT_KEYS_MAX = 4096
+
+
+def _structure_key(container, build) -> tuple:
+    ent = _STRUCT_KEYS.get(id(container))
+    if ent is not None and ent[0] is container:
+        return ent[1]
+    key = build(container)
+    while len(_STRUCT_KEYS) >= _STRUCT_KEYS_MAX:
+        _STRUCT_KEYS.pop(next(iter(_STRUCT_KEYS)))
+    _STRUCT_KEYS[id(container)] = (container, key)
+    return key
+
+
+def _loops_key(loops) -> tuple:
+    return tuple((str(lp.var), str(lp.start), str(lp.stop), lp.step)
+                 for lp in loops)
+
+
+def _accesses_key(accesses) -> tuple:
+    return tuple((a.array.name, tuple(str(d) for d in a.array.dims),
+                  a.array.element_bytes, tuple(str(i) for i in a.index),
+                  a.is_write)
+                 for a in accesses)
+
+
+def _arrays_key(arrays) -> tuple:
+    # insertion order matters: the cache simulator lays arrays out
+    # back-to-back in dict order, so base addresses (and set conflicts)
+    # depend on it — and unaccessed arrays still shift later bases.
+    return tuple((name, tuple(str(d) for d in arr.dims), arr.element_bytes)
+                 for name, arr in arrays.items())
+
+
+def kernel_key(kernel: LoopKernel) -> tuple:
+    """Structural identity of a kernel: loops, accesses, bound constants.
+
+    Everything the analyses read is captured; mutable containers are frozen
+    so the key is hashable.  Two kernels with identical structure share a
+    key no matter how they were constructed.
+    """
+    return (
+        kernel.name,
+        kernel.dtype_bytes,
+        tuple(sorted(kernel.constants.items())),
+        _structure_key(kernel.loops, _loops_key),
+        _structure_key(kernel.accesses, _accesses_key),
+        _structure_key(kernel.arrays, _arrays_key),
+        (kernel.flops.add, kernel.flops.mul, kernel.flops.div,
+         kernel.flops.fma),
+    )
+
+
+def _freeze(v):
+    """Recursively convert dicts/lists into hashable tuples for cache keys."""
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple, set)):
+        return tuple(_freeze(x) for x in v)
+    return v
+
+
+@dataclasses.dataclass
+class SessionStats:
+    incore_hits: int = 0
+    incore_misses: int = 0
+    volume_hits: int = 0
+    volume_misses: int = 0
+    result_hits: int = 0
+    result_misses: int = 0
+
+    @property
+    def hits(self) -> int:
+        return self.incore_hits + self.volume_hits + self.result_hits
+
+    @property
+    def misses(self) -> int:
+        return self.incore_misses + self.volume_misses + self.result_misses
+
+
+class AnalysisSession:
+    """Shared, memoized predictor/in-core/model state for one machine."""
+
+    def __init__(self, machine: Machine, predictor: str = "LC",
+                 cores: int = 1, sim_kwargs: dict | None = None):
+        self.machine = machine
+        self.predictor = predictor
+        self.cores = cores
+        self.sim_kwargs = dict(sim_kwargs or {})
+        self.stats = SessionStats()
+        self._incore: dict[tuple, InCoreResult] = {}
+        self._volumes: dict[tuple, VolumePrediction] = {}
+        self._results: dict[tuple, Result] = {}
+
+    # ------------------------------------------------------------------
+    def clear(self) -> None:
+        self._incore.clear()
+        self._volumes.clear()
+        self._results.clear()
+        self.stats = SessionStats()
+
+    def _defaults(self, predictor, cores, sim_kwargs):
+        return (self.predictor if predictor is None else predictor,
+                self.cores if cores is None else cores,
+                self.sim_kwargs if sim_kwargs is None else sim_kwargs)
+
+    # ------------------------------------------------------------------
+    def incore(self, kernel: LoopKernel) -> InCoreResult:
+        """Memoized in-core port-model analysis (paper §2.5)."""
+        key = (kernel_key(kernel), self.machine.name)
+        hit = self._incore.get(key)
+        if hit is not None:
+            self.stats.incore_hits += 1
+            return hit
+        self.stats.incore_misses += 1
+        res = incore.analyze_x86(kernel, self.machine)
+        self._incore[key] = res
+        return res
+
+    def volumes(self, kernel: LoopKernel, predictor: str | None = None,
+                cores: int | None = None,
+                sim_kwargs: dict | None = None) -> VolumePrediction:
+        """Memoized per-level traffic prediction (β_k)."""
+        predictor, cores, sim_kwargs = self._defaults(predictor, cores,
+                                                      sim_kwargs)
+        key = (kernel_key(kernel), self.machine.name, predictor.upper(),
+               cores, _freeze(sim_kwargs))
+        hit = self._volumes.get(key)
+        if hit is not None:
+            self.stats.volume_hits += 1
+            return hit
+        self.stats.volume_misses += 1
+        res = predict_volumes(kernel, self.machine, predictor, cores=cores,
+                              sim_kwargs=sim_kwargs)
+        self._volumes[key] = res
+        return res
+
+    def analyze(self, kernel: LoopKernel, model: str = "ecm",
+                predictor: str | None = None, cores: int | None = None,
+                sim_kwargs: dict | None = None, **opts) -> Result:
+        """Memoized full model run, routed through :data:`MODEL_REGISTRY`.
+
+        On a miss the model receives the session's memoized volumes and
+        in-core result, so several models over one kernel share both.
+        """
+        m = resolve_model(model)
+        predictor, cores, sim_kwargs = self._defaults(predictor, cores,
+                                                      sim_kwargs)
+        key = (m.name, kernel_key(kernel), self.machine.name,
+               predictor.upper(), cores, _freeze(sim_kwargs), _freeze(opts))
+        hit = self._results.get(key)
+        if hit is not None:
+            self.stats.result_hits += 1
+            return hit
+        self.stats.result_misses += 1
+        vols = self.volumes(kernel, predictor, cores, sim_kwargs)
+        ic = self.incore(kernel)
+        res = m.analyze(kernel, self.machine, predictor=predictor,
+                        cores=cores, sim_kwargs=sim_kwargs, volumes=vols,
+                        incore_result=ic, **opts)
+        self._results[key] = res
+        return res
+
+    # ------------------------------------------------------------------
+    def sweep(self, kernel: LoopKernel, param: str, values,
+              models=("ecm",), predictor: str | None = None,
+              cores: int | None = None, sim_kwargs: dict | None = None,
+              **opts) -> dict[str, list[Result]]:
+        """Evaluate ``models`` at every ``param`` value (the batch API).
+
+        Returns ``{model_name: [result per value]}``.  Each point's
+        predictor volumes and in-core analysis are computed once and shared
+        by all requested models; repeating the sweep hits the result cache.
+        """
+        out: dict[str, list[Result]] = {str(m): [] for m in models}
+        for v in values:
+            bound = kernel.bind(**{param: int(v)})
+            for m in models:
+                out[str(m)].append(
+                    self.analyze(bound, m, predictor=predictor, cores=cores,
+                                 sim_kwargs=sim_kwargs, **opts))
+        return out

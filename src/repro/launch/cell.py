@@ -176,7 +176,8 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             return model.prefill(params, batch, caches, rule=rule)
 
         crecs = model.cache_recs(shape.batch, shape.seq)
-        cabs = common.abstract_tree(crecs)
+        cabs = common.abstract_tree(crecs,
+                                    default_dtype=jnp.dtype(cfg.act_dtype))
         cspecs = common.spec_tree(crecs, rule)
         return Cell(
             arch=arch, shape=shape, cfg=cfg, model=model, fn=prefill_fn,
@@ -190,7 +191,8 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         return model.decode_step(params, caches, tokens_, pos, rule=rule)
 
     crecs = model.cache_recs(shape.batch, shape.seq)
-    cabs = common.abstract_tree(crecs)
+    cabs = common.abstract_tree(crecs,
+                                default_dtype=jnp.dtype(cfg.act_dtype))
     cspecs = common.spec_tree(crecs, rule)
     return Cell(
         arch=arch, shape=shape, cfg=cfg, model=model, fn=decode_fn,

@@ -290,6 +290,9 @@ def mla_apply(p, x, cfg, positions=None, cache=None, pos=None, rule=None):
         # rematerialization in the SPMD partitioner (23.5 TiB of extra
         # all-gathers). The fp32 score-tile traffic is instead addressed by
         # the Pallas flash kernel on real TPUs (kernel-aware §Roofline).
+        # Exact prefill/decode logit parity (same-argmax tests) comes from
+        # cfg.act_dtype=float32, not from forcing fp32 here — bf16 configs
+        # keep bf16 score/value tiles.
         scores = (jnp.einsum("bqnh,bknh->bnqk", q_nope, k_nope)
                   + jnp.einsum("bqnh,bkoh->bnqk", q_rope,
                                jnp.broadcast_to(k_rope, k_rope.shape))) \

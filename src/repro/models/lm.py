@@ -291,7 +291,8 @@ class LM:
 
     def _embed(self, params, tokens, batch_extra, rule):
         cfg = self.cfg
-        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(
+            jnp.dtype(cfg.act_dtype))
         if cfg.emb_scale:
             x = x * math.sqrt(cfg.d_model)
         if cfg.n_img_tokens and "patch_embeds" in (batch_extra or {}):
@@ -304,7 +305,7 @@ class LM:
     def _encoder(self, params, frames, rule):
         cfg = self.cfg
         enc = params["encoder"]
-        x = frames.astype(jnp.bfloat16)
+        x = frames.astype(jnp.dtype(cfg.act_dtype))
         pos = _sinusoid(x.shape[1], cfg.d_model, x.dtype)
         x = x + pos[None]
 

@@ -17,9 +17,11 @@ from repro.models.common import materialize
 
 
 def make_caches(model, batch: int, max_len: int, key=None):
-    """Zero-init cache pytree mirroring the model's stage structure."""
+    """Zero-init cache pytree mirroring the model's stage structure; cache
+    entries default to the model's activation dtype."""
     recs = model.cache_recs(batch, max_len)
-    return materialize(recs, jax.random.PRNGKey(0) if key is None else key)
+    return materialize(recs, jax.random.PRNGKey(0) if key is None else key,
+                       default_dtype=jnp.dtype(model.cfg.act_dtype))
 
 
 @dataclasses.dataclass

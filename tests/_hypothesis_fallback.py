@@ -1,0 +1,82 @@
+"""Deterministic stand-in for the tiny slice of hypothesis the suite uses.
+
+The container may not ship ``hypothesis``; rather than skip every property
+test, this shim replays each ``@given`` test over a fixed number of
+pseudo-randomly drawn examples (seeded, so runs are reproducible).  It
+implements only what the tests import: ``given``, ``settings``, and the
+``integers`` / ``sampled_from`` / ``composite`` strategies.
+
+Import pattern (both test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import random
+
+_MAX_EXAMPLES = 5      # cap: the shim is a smoke net, not a fuzzer
+
+
+class Strategy:
+    """A value source: ``sample(rng) -> value``."""
+
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng: random.Random):
+        return self._sampler(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> Strategy:
+        items = list(seq)
+        return Strategy(lambda rng: rng.choice(items))
+
+    @staticmethod
+    def composite(fn):
+        def builder(*args, **kwargs) -> Strategy:
+            def sampler(rng):
+                return fn(lambda strat: strat.sample(rng), *args, **kwargs)
+            return Strategy(sampler)
+        return builder
+
+
+st = strategies
+
+
+def settings(max_examples: int | None = None, **_ignored):
+    """Records the example budget (capped); other options are no-ops."""
+    def deco(fn):
+        fn._fallback_max_examples = min(max_examples or _MAX_EXAMPLES,
+                                        _MAX_EXAMPLES)
+        return fn
+    return deco
+
+
+def given(*strat_args: Strategy, **strat_kwargs: Strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            # read from the wrapper: @settings may be applied above @given
+            n = getattr(wrapper, "_fallback_max_examples", _MAX_EXAMPLES)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = [s.sample(rng) for s in strat_args]
+                drawn_kw = {k: s.sample(rng) for k, s in strat_kwargs.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+        # NB: no functools.wraps — a __wrapped__ attribute would make pytest
+        # read the original signature and treat drawn params as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        # tolerate either decorator order with @settings
+        wrapper._fallback_max_examples = getattr(
+            fn, "_fallback_max_examples", _MAX_EXAMPLES)
+        return wrapper
+    return deco

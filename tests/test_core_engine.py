@@ -4,7 +4,11 @@ import pathlib
 
 import pytest
 import sympy
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (blocking, cachesim, ecm, layer_conditions,
                         load_machine, parse_kernel)

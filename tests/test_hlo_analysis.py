@@ -38,6 +38,8 @@ def test_scan_trip_count_multiplies():
     assert ana.mxu_flops == want
     # and XLA's own analysis indeed undercounts (the reason we parse):
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax wraps it in a list
+        ca = ca[0]
     assert ca["flops"] < want
 
 
