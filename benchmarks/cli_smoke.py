@@ -1,0 +1,49 @@
+"""CLI smoke: the kerncraft-style command line must reproduce the paper's
+Listing-4 ECM numbers (``{ 52.0 || 54.0 | 40.0 | 24.0 | 48.5 }``; the last
+term is bandwidth-derived, so it carries the same ±2% tolerance the test
+suite uses) and the trace frontend must agree with the C frontend through
+the same entry point."""
+import contextlib
+import io
+import re
+
+from repro import cli
+
+LISTING4_PREFIX = "{ 52.0 || 54.0 | 40.0 | 24.0 | "
+
+
+def _run(argv) -> str:
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        rc = cli.main(argv)
+    if rc != 0:
+        raise AssertionError(f"CLI exited {rc} for {argv}:\n{buf.getvalue()}")
+    return buf.getvalue()
+
+
+def run() -> str:
+    out = [">> python -m repro analyze configs/stencils/"
+           "stencil_3d_long_range.c -m ivybridge_ep.yaml -p ecm "
+           "-D M 130 -D N 1015"]
+    text = _run(["analyze", "configs/stencils/stencil_3d_long_range.c",
+                 "-m", "ivybridge_ep.yaml", "-p", "ecm",
+                 "-D", "M", "130", "-D", "N", "1015"])
+    out.append(text.rstrip())
+    assert LISTING4_PREFIX in text, f"Listing-4 ECM terms missing:\n{text}"
+    mem = float(re.search(r"\| (\d+\.\d) \} cy/CL", text).group(1))
+    assert abs(mem - 48.5) / 48.5 < 0.02, f"L3-MEM term {mem} vs paper 48.5"
+
+    c_text = _run(["analyze", "configs/stencils/stencil_3d7pt.c",
+                   "-m", "IVY", "-p", "ecm", "--name", "3d-7pt",
+                   "-D", "M", "130", "-D", "N", "100", "--json"])
+    t_text = _run(["analyze", "trace:stencil3d7pt", "-m", "IVY", "-p", "ecm",
+                   "-D", "M", "130", "-D", "N", "100", "--json"])
+    assert c_text == t_text, "trace frontend diverges from C frontend"
+    out.append("trace:stencil3d7pt --json == stencil_3d7pt.c --json  "
+               "(frontend parity, bit-identical)")
+    out.append(f"paper: {LISTING4_PREFIX}48.5 }} cy/CL  (got {mem})")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,19 +1,15 @@
 """Paper Fig 5: single-socket strong scaling of the long-range stencil
 (N=1015, M=130ish): perfect scaling to the predicted saturation point
 (4 cores), constant at the bandwidth limit beyond."""
-import pathlib
-
-from repro.core import analyze, load_machine, parse_kernel
-
-STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
-    "src" / "repro" / "configs" / "stencils"
+from repro.core import analyze
 
 
 def run() -> str:
-    m = load_machine("IVY")
-    k = parse_kernel((STENCILS / "stencil_3d_long_range.c").read_text(),
-                     name="3d-long-range", constants={"M": 132, "N": 1015})
-    e = analyze("ecm", k, m, predictor="LC")
+    # the unified entry point: C file resolved against the bundled stencils,
+    # memoized per-machine session, registry-dispatched model
+    e = analyze("configs/stencils/stencil_3d_long_range.c", "IVY",
+                model="ecm", predictor="LC", name="3d-long-range",
+                constants={"M": 132, "N": 1015})
     curve = e.scaling_curve(10)
     lines = [f"predicted saturation point: n_s = {e.saturation_cores} cores "
              "(paper: 4)",

@@ -10,9 +10,9 @@ scripts/verify.sh; finishes well under a minute)."""
 import argparse
 import time
 
-from benchmarks import (kernels_bench, paper_ecm, paper_fig5, paper_fig34,
-                        paper_listing4, paper_listing5, paper_table1,
-                        roofline_table, session_cache, tpu_ecm)
+from benchmarks import (cli_smoke, kernels_bench, paper_ecm, paper_fig5,
+                        paper_fig34, paper_listing4, paper_listing5,
+                        paper_table1, roofline_table, session_cache, tpu_ecm)
 
 SECTIONS = [
     ("Paper Table 1 — 3D-7pt Roofline volumes & times", paper_table1.run),
@@ -29,6 +29,7 @@ SECTIONS = [
     ("Pallas kernels — interpret timing + v5e predictions",
      kernels_bench.run),
     ("§Roofline — dry-run artifacts table", roofline_table.run),
+    ("CLI — kerncraft-style analyze reproduces Listing 4", cli_smoke.run),
 ]
 
 # fast subset exercising the registry/session layer end to end (<60 s)
@@ -38,6 +39,7 @@ SMOKE = [
     ("Paper Fig 5 — strong scaling & saturation point", paper_fig5.run),
     ("AnalysisSession — memoized sweep micro-benchmark",
      lambda: session_cache.run(points=20)),
+    ("CLI — kerncraft-style analyze reproduces Listing 4", cli_smoke.run),
 ]
 
 

@@ -1,44 +1,56 @@
-"""The paper's §3 case study end to end (Listings 4 & 5, Figs 3-5): model
-the long-range stencil on IVY with both predictors through the unified
-model registry and one memoizing AnalysisSession, print transition points
-and the scaling curve, then run the TPU-adapted analysis and the Pallas
-kernel for the same stencil.
+"""The paper's §3 case study end to end (Listings 4 & 5, Figs 3-5) through
+the unified frontend API: one ``analyze()`` call models the long-range
+stencil from its C file, from the traced Pallas point function, and (as an
+HLO program) from the compiled XLA executable — all on the same memoized
+session — then runs the Pallas kernel itself against its oracle.
 
     PYTHONPATH=src python examples/stencil_modeling.py
 """
-import pathlib
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AnalysisSession, load_machine, parse_kernel, reports
-
+from repro.core import analyze, get_session, load_machine, reports
+from repro.core.frontends import load_kernel
 from repro.kernels import longrange3d, ref
+from repro.kernels.longrange3d import point as longrange_point
 
-STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
-    "src" / "repro" / "configs" / "stencils"
+SIZES = {"M": 130, "N": 1015}
 
-src = (STENCILS / "stencil_3d_long_range.c").read_text()
-kernel = parse_kernel(src, name="3d-long-range",
-                      constants={"M": 130, "N": 1015})
-ivy = load_machine("IVY")
-sess = AnalysisSession(ivy, sim_kwargs={"warmup_rows": 2, "measure_rows": 1})
-
-print("=== kerncraft -p ECM -p RooflineIACA 3d-long-range.c -m IVY "
+print("=== python -m repro analyze stencil_3d_long_range.c -m IVY -p ECM "
       "-D M 130 -D N 1015 ===")
 for pred in ("LC", "SIM"):
-    res = sess.analyze(kernel, "ecm", predictor=pred)
+    res = analyze("configs/stencils/stencil_3d_long_range.c", "IVY",
+                  model="ecm", predictor=pred, name="3d-long-range",
+                  constants=SIZES)
     print(f"[{pred}] {res.notation()}  -> saturating at "
           f"{res.saturation_cores} cores")
 
-print()
-print(reports.lc_report(kernel, ivy, symbol="N"))
+print("\n=== the same kernel through the trace frontend "
+      "(JAX/Pallas point function) ===")
+traced = analyze(longrange_point, "IVY", model="ecm", predictor="LC",
+                 constants=SIZES)
+c_res = analyze("configs/stencils/stencil_3d_long_range.c", "IVY",
+                model="ecm", predictor="LC", name="3d-long-range",
+                constants=SIZES)
+assert traced.to_dict() == c_res.to_dict(), "frontend parity violated"
+print(f"trace == c frontend, bit-identical: {traced.notation()}")
+k = load_kernel(longrange_point, constants=SIZES)
+print(f"traced IR: {len(k.reads())} reads, {len(k.writes())} write, "
+      f"{k.flops.total} flops/it")
 
-print("\n=== scaling (paper Fig 5) ===")
-res = sess.analyze(kernel, "ecm", predictor="LC")   # session cache hit
+ivy = load_machine("IVY")
+print()
+print(reports.lc_report(k, ivy, symbol="N"))
+
+print("\n=== scaling (paper Fig 5; session cache hit) ===")
+res = analyze("configs/stencils/stencil_3d_long_range.c", "IVY",
+              model="ecm", predictor="LC", name="3d-long-range",
+              constants=SIZES)
 for c, p in enumerate(res.scaling_curve(8), 1):
     print(f"  {c} cores: {p/1e9:6.2f} GFLOP/s")
+stats = get_session(ivy).stats
+print(f"session: {stats.hits} cache hits / {stats.misses} misses")
 
 print("\n=== machine-readable result (Result.to_dict round-trip) ===")
 rt = reports.from_json(reports.to_json(res))
@@ -57,3 +69,8 @@ np.testing.assert_allclose(out, ref.longrange3d(u, v, roc, c),
                            rtol=2e-4, atol=1e-5)
 print(f"Pallas long-range kernel == oracle on {shape}; "
       "VMEM working set = 11 k-planes (the 3D layer condition).")
+
+print("\n=== and its compiled HLO through the hlo frontend ===")
+compiled = jax.jit(ref.longrange3d).lower(u, v, roc, c).compile()
+hres = analyze(compiled, "V5E", model="hlo-roofline", name="longrange3d-ref")
+print(reports.hlo_report(hres))

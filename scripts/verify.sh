@@ -14,8 +14,21 @@ python -m pytest -x -q
 
 if [[ "${1:-}" != "--tests" ]]; then
   echo
+  echo "== CLI smoke (python -m repro) =="
+  timeout 120 python -m repro analyze configs/stencils/stencil_3d7pt.c \
+    -m ivybridge_ep.yaml -p ecm -D N 100 -D M 130
+  # Listing-4 check: the long-range stencil at the paper's sizes must emit
+  # { 52.0 || 54.0 | 40.0 | 24.0 | ~48.5 } cy/CL (last term bandwidth-derived)
+  out="$(timeout 120 python -m repro analyze \
+    configs/stencils/stencil_3d_long_range.c -m ivybridge_ep.yaml -p ecm \
+    -D M 130 -D N 1015)"
+  echo "$out"
+  echo "$out" | grep -qF '{ 52.0 || 54.0 | 40.0 | 24.0 | 48.' \
+    || { echo "CLI smoke: Listing-4 ECM terms missing"; exit 1; }
+
+  echo
   echo "== benchmark smoke (registry/session; <60 s) =="
-  timeout 120 python -m benchmarks.run --smoke
+  timeout 180 python -m benchmarks.run --smoke
 fi
 
 echo

@@ -1,0 +1,183 @@
+"""Kerncraft-style command line over the unified analyze() API.
+
+    python -m repro analyze configs/stencils/stencil_3d_long_range.c \
+        -m ivybridge_ep.yaml -p ecm -p roofline-iaca -D M 130 -D N 1015
+    python -m repro analyze trace:stencil3d7pt -m IVY -p ecm -D M 130 -D N 100
+    python -m repro analyze dump.hlo -m V5E -p hlo-roofline
+    python -m repro sweep configs/stencils/stencil_3d7pt.c -m IVY \
+        --param N --range 100 1100 100 --json
+    python -m repro blocking configs/stencils/stencil_3d_long_range.c -m IVY
+
+Mirrors the paper's UX (``kerncraft -m machine.yml -p ECM kernel.c -D N
+1000``): ``-D`` binds symbolic sizes, ``-p`` picks registered performance
+models (repeatable), ``--cache-predictor`` the LC/SIM switch, and
+``--json`` emits the machine-readable ``to_dict()`` stream instead of the
+text reports — both routed through :mod:`repro.core.reports`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core import LoopKernel, api, blocking, reports
+
+
+def _add_common(sp: argparse.ArgumentParser) -> None:
+    sp.add_argument("kernel",
+                    help="kernel source: .c file, HLO text/dump, or "
+                         "trace:<module>[:attr] point-function reference")
+    sp.add_argument("-m", "--machine", required=True,
+                    help="machine description: short name (IVY, V5E), "
+                         "bundled yaml name, or path")
+    sp.add_argument("-D", "--define", nargs=2, action="append", default=[],
+                    metavar=("NAME", "VALUE"),
+                    help="bind a symbolic constant (repeatable)")
+    sp.add_argument("--frontend", default=None,
+                    choices=["c", "builder", "trace", "hlo"],
+                    help="force a frontend instead of auto-detection")
+    sp.add_argument("--name", default=None, help="kernel name override")
+    sp.add_argument("--cache-predictor", default="LC", choices=["LC", "SIM"],
+                    help="traffic predictor: layer conditions or cache "
+                         "simulator (default LC)")
+    sp.add_argument("--cores", type=int, default=1)
+    sp.add_argument("--json", action="store_true",
+                    help="emit machine-readable results (reports.to_json)")
+
+
+def _constants(args) -> dict | None:
+    if not args.define:
+        return None
+    return {name: int(value) for name, value in args.define}
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro",
+        description="analytic performance modeling of loop kernels "
+                    "(Kerncraft reproduction)")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    sp = sub.add_parser("analyze",
+                        help="run performance models over one kernel")
+    _add_common(sp)
+    sp.add_argument("-p", "--performance-model", action="append",
+                    default=None, metavar="MODEL",
+                    help="registered model name (repeatable; default ecm)")
+
+    sp = sub.add_parser("sweep", help="evaluate models over a size sweep")
+    _add_common(sp)
+    sp.add_argument("-p", "--performance-model", action="append",
+                    default=None, metavar="MODEL")
+    sp.add_argument("--param", default="N",
+                    help="symbol to sweep (default N)")
+    sp.add_argument("--range", nargs=3, type=int, required=True,
+                    metavar=("START", "STOP", "STEP"),
+                    help="sweep values START..STOP inclusive, stepping STEP")
+
+    sp = sub.add_parser("blocking",
+                        help="per-level LC blocking factors + model table")
+    _add_common(sp)
+    sp.add_argument("--symbol", default="N",
+                    help="loop symbol to block (default N)")
+    sp.add_argument("--safety", type=float, default=0.5,
+                    help="usable fraction of each cache level (default 0.5)")
+    return ap
+
+
+def _load(args):
+    machine = api.resolve_machine(args.machine)
+    kernel = api.load_kernel(args.kernel, frontend=args.frontend,
+                             name=args.name, constants=_constants(args))
+    return machine, kernel
+
+
+def _models(args) -> list[str]:
+    return args.performance_model or ["ecm"]
+
+
+def cmd_analyze(args) -> int:
+    machine, kernel = _load(args)
+    sess = api.get_session(machine)
+    results = []
+    for model in _models(args):
+        res = sess.analyze(kernel, model, predictor=args.cache_predictor,
+                           cores=args.cores)
+        results.append((model, res))
+    if args.json:
+        print(json.dumps([r.to_dict() for _, r in results], indent=2,
+                         sort_keys=True))
+        return 0
+    kname = getattr(kernel, "name", args.kernel)
+    defines = " ".join(f"-D {n} {v}" for n, v in args.define)
+    print(f"{kname}  -m {args.machine} "
+          f"--cache-predictor {args.cache_predictor} {defines}".rstrip())
+    for model, res in results:
+        print()
+        print(reports.text_report(res, cores=args.cores))
+    return 0
+
+
+def cmd_sweep(args) -> int:
+    machine, kernel = _load(args)
+    start, stop, step = args.range
+    values = list(range(start, stop + 1, step))     # STOP inclusive
+    models = _models(args)
+    out = api.sweep(kernel, machine, args.param, values, models=models,
+                    predictor=args.cache_predictor, cores=args.cores)
+    if args.json:
+        print(json.dumps(
+            {m: [r.to_dict() for r in rs] for m, rs in out.items()},
+            indent=2, sort_keys=True))
+        return 0
+    print(f"{args.param:>6} | " + " | ".join(f"{m:>18}" for m in models)
+          + "   (cy/CL for ecm, GFLOP/s for roofline)")
+    for idx, v in enumerate(values):
+        cells = []
+        for m in models:
+            r = out[m][idx]
+            if hasattr(r, "t_ecm"):
+                cells.append(f"{r.t_ecm:>15.1f} cy")
+            else:
+                cells.append(f"{r.performance / 1e9:>12.2f} GF/s")
+        print(f"{v:>6} | " + " | ".join(f"{c:>18}" for c in cells))
+    return 0
+
+
+def cmd_blocking(args) -> int:
+    machine, kernel = _load(args)
+    if not isinstance(kernel, LoopKernel):
+        raise TypeError(
+            "blocking analyzes symbolic loop kernels; "
+            f"{args.kernel!r} loaded as {type(kernel).__name__} "
+            "(use a c/builder/trace source)")
+    rows = []
+    for lv in machine.levels:
+        bs = blocking.lc_block_size(kernel, lv.size_bytes,
+                                    symbol=args.symbol, safety=args.safety)
+        rows.append({"level": lv.name, "size_bytes": lv.size_bytes,
+                     "block": bs})
+    if args.json:
+        print(json.dumps({"symbol": args.symbol, "levels": rows}, indent=2))
+        return 0
+    print(f"LC blocking factors for {getattr(kernel, 'name', args.kernel)} "
+          f"(symbol {args.symbol}, safety {args.safety}):")
+    for row in rows:
+        blk = "unbounded" if row["block"] >= 1 << 30 else str(row["block"])
+        print(f"  {row['level']:<5} ({row['size_bytes'] / 1024:8.0f} kB): "
+              f"{args.symbol} <= {blk}")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return {"analyze": cmd_analyze, "sweep": cmd_sweep,
+                "blocking": cmd_blocking}[args.command](args)
+    except (ValueError, TypeError, FileNotFoundError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,18 +3,25 @@
 # blocking-factor prediction), retargeted from x86 caches to the TPU
 # VREG<-VMEM<-HBM(<-ICI) hierarchy. See DESIGN.md §2-3.
 #
-# Layering (DESIGN.md §4-5): predictors.py owns the LC/SIM dispatch,
-# model_api.py the PerformanceModel registry, session.py the memoizing
-# AnalysisSession every sweep and report runs through.
-from . import (blocking, c_parser, cachesim, ecm, incore, kernel_ir,
-               layer_conditions, machine, model_api, predictors, reports,
-               roofline, session)  # noqa: F401
+# Layering (DESIGN.md §4-5, §7): frontends/ turns any source (C, traced
+# JAX/Pallas point functions, builder IR, compiled HLO) into a kernel
+# object, predictors.py owns the LC/SIM dispatch, model_api.py the
+# PerformanceModel registry, session.py the memoizing AnalysisSession, and
+# api.py the one analyze() entry point tying them together.
+from . import (blocking, c_parser, cachesim, ecm, frontends, incore,
+               kernel_ir, layer_conditions, machine, model_api, predictors,
+               reports, roofline, session)  # noqa: F401
+from . import api, hlo_analysis  # noqa: F401
 
+from .api import analyze, get_session, resolve_machine, sweep  # noqa: F401
 from .c_parser import parse_kernel  # noqa: F401
+from .frontends import (FRONTEND_REGISTRY, HLOProgram,  # noqa: F401
+                        KernelFrontend, kernel_spec, load_kernel,
+                        register_frontend, resolve_frontend, trace_kernel)
 from .kernel_ir import FlopCount, LoopKernel  # noqa: F401
 from .machine import Machine, load as load_machine  # noqa: F401
 from .model_api import (MODEL_REGISTRY, PerformanceModel,  # noqa: F401
-                        analyze, resolve_model)
+                        resolve_model)
 from .predictors import (PREDICTOR_REGISTRY, CachePredictor,  # noqa: F401
                          VolumePrediction, predict_volumes,
                          resolve_predictor)

@@ -1,0 +1,138 @@
+"""The unified analysis entry point (DESIGN.md §7).
+
+One call resolves *any* source — C text or file, a traced JAX/Pallas point
+function, hand-built kernel IR, or a compiled HLO module — through the
+frontend registry, then routes it through :data:`MODEL_REGISTRY` and a
+memoizing :class:`~repro.core.session.AnalysisSession`:
+
+    from repro.core import analyze
+    res = analyze("configs/stencils/stencil_3d7pt.c", "IVY",
+                  model="ecm", predictor="LC", constants={"M": 130, "N": 100})
+    res.to_dict()
+
+This is the library face of the paper's CLI (``kerncraft -m machine.yml -p
+ECM kernel.c -D N 1000``); :mod:`repro.cli` is the command-line face of
+this function.  Sessions are pooled per machine, so repeated ``analyze``
+calls — a service answering model queries, a notebook exploring variants —
+hit the warm predictor/in-core/result caches automatically.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Any
+
+from .frontends import load_kernel
+from .machine import Machine
+from .machine import load as load_machine
+from .model_api import Result
+from .session import AnalysisSession, _freeze
+
+# session pool: one memoizing session per machine description.  Keyed by
+# machine name — bundled machines are singletons per name, and a hand-built
+# Machine with a colliding name still analyzes correctly (the pooled session
+# stores whichever Machine arrived first, so pass session= explicitly when
+# juggling same-named variants).
+_SESSIONS: dict[str, AnalysisSession] = {}
+
+
+def resolve_machine(machine: Machine | str | pathlib.Path) -> Machine:
+    """Accept a Machine, a bundled short name ('IVY'), a bundled yaml name
+    ('ivybridge_ep.yaml'), or a filesystem path."""
+    if isinstance(machine, Machine):
+        return machine
+    return load_machine(str(machine))
+
+
+def get_session(machine: Machine | str | pathlib.Path) -> AnalysisSession:
+    """The pooled memoizing session for ``machine`` (created on first use)."""
+    m = resolve_machine(machine)
+    sess = _SESSIONS.get(m.name)
+    if sess is None:
+        sess = _SESSIONS[m.name] = AnalysisSession(m)
+    return sess
+
+
+def clear_sessions() -> None:
+    _SESSIONS.clear()
+    _KERNELS.clear()
+
+
+# loaded-kernel cache: without it every warm analyze() call would still
+# re-read and re-parse (or re-trace) its source just to compute the key
+# that hits the session's result cache.  Only hashable sources (paths,
+# source text, point functions) are cached; kernels are treated as
+# immutable everywhere (bind() copies).  Bounded like the session's
+# structure-key cache; a path whose file changes on disk mid-process keeps
+# its first parse, matching how sessions pin the first Machine per name.
+_KERNELS: dict[tuple, Any] = {}
+_KERNELS_MAX = 512
+
+
+def _load_kernel_cached(source, frontend, name, constants, frontend_opts):
+    try:
+        key = (frontend, source, name, _freeze(constants or {}),
+               _freeze(frontend_opts or {}))
+        hash(key)
+    except TypeError:                 # unhashable source (LoopKernel, dict)
+        return load_kernel(source, frontend=frontend, name=name,
+                           constants=constants, **(frontend_opts or {}))
+    hit = _KERNELS.get(key)
+    if hit is not None:
+        return hit
+    kernel = load_kernel(source, frontend=frontend, name=name,
+                         constants=constants, **(frontend_opts or {}))
+    while len(_KERNELS) >= _KERNELS_MAX:
+        _KERNELS.pop(next(iter(_KERNELS)))
+    _KERNELS[key] = kernel
+    return kernel
+
+
+def analyze(source: Any, machine: Machine | str, model: str = "ecm",
+            predictor: str = "LC", *, frontend: str | None = None,
+            name: str | None = None, constants: dict | None = None,
+            cores: int = 1, sim_kwargs: dict | None = None,
+            session: AnalysisSession | None = None,
+            frontend_opts: dict | None = None, **opts) -> Result:
+    """Analyze any kernel source under any registered model.
+
+    ``source`` is resolved through the frontend registry (``frontend=``
+    forces one; otherwise it is detected).  ``name``/``constants`` go to the
+    frontend (``constants`` is the CLI's ``-D``); ``predictor``, ``cores``,
+    ``sim_kwargs`` and remaining ``opts`` go to the model.  Pass
+    ``session=`` to use your own memoizing session instead of the pooled
+    per-machine one.
+    """
+    mach = resolve_machine(machine)
+    kernel = _load_kernel_cached(source, frontend, name, constants,
+                                 frontend_opts)
+    sess = session if session is not None else get_session(mach)
+    if sess.machine.name != mach.name:
+        raise ValueError(
+            f"session is bound to machine {sess.machine.name!r}, "
+            f"not {mach.name!r}")
+    return sess.analyze(kernel, model, predictor=predictor, cores=cores,
+                        sim_kwargs=sim_kwargs, **opts)
+
+
+def sweep(source: Any, machine: Machine | str, param: str, values,
+          models=("ecm",), predictor: str = "LC", *,
+          frontend: str | None = None, name: str | None = None,
+          constants: dict | None = None, cores: int = 1,
+          sim_kwargs: dict | None = None,
+          session: AnalysisSession | None = None,
+          frontend_opts: dict | None = None,
+          **opts) -> dict[str, list[Result]]:
+    """Frontend-aware batch API: load once, evaluate ``models`` at every
+    ``param`` value through the memoizing session (see
+    :meth:`AnalysisSession.sweep`)."""
+    mach = resolve_machine(machine)
+    kernel = _load_kernel_cached(source, frontend, name, constants,
+                                 frontend_opts)
+    sess = session if session is not None else get_session(mach)
+    if sess.machine.name != mach.name:
+        raise ValueError(
+            f"session is bound to machine {sess.machine.name!r}, "
+            f"not {mach.name!r}")
+    return sess.sweep(kernel, param, values, models=models,
+                      predictor=predictor, cores=cores,
+                      sim_kwargs=sim_kwargs, **opts)

@@ -1,20 +1,25 @@
 """C99-subset front end (paper §2.1 'Kernel Code').
 
 Accepts exactly the paper's input language: variable/array declarations
-followed by a perfect loop nest whose innermost body holds assignments over
-constants, scalars, and affine array references (multi-dimensional
-``a[j][i]`` or flattened ``a[j*N+i]`` syntax). Function calls, ifs, pointer
-arithmetic and irregular accesses are rejected, as in Kerncraft.
+(``const``/``restrict``-style qualifiers and signed-literal scalar
+initializers are tolerated, so real-world kerncraft stencil files parse
+unmodified) followed by a perfect loop nest whose innermost body holds
+assignments over constants, scalars, and affine array references
+(multi-dimensional ``a[j][i]`` or flattened ``a[j*N+i]`` syntax). Function
+calls, ifs, pointer arithmetic and irregular accesses are rejected, as in
+Kerncraft.
 
 The paper's Listings 1 and 3 parse verbatim (see ``repro/configs/stencils``).
 """
 from __future__ import annotations
 
+import functools
 import re
 
 import sympy
 
 from .kernel_ir import Access, Array, FlopCount, Loop, LoopKernel
+from .kernel_ir import sympify_ids as _sympify_ids_raw
 
 _TOKEN_RE = re.compile(r"""
     (?P<float>\d+\.\d*(?:[fF])?|\.\d+(?:[fF])?|\d+[fF])
@@ -26,17 +31,24 @@ _TOKEN_RE = re.compile(r"""
 
 _TYPES = {"double": 8, "float": 4}
 
+# type qualifiers / storage classes real-world kerncraft stencil files carry;
+# they do not change the analysis, so the parser skips them wherever a type
+# may appear
+_QUALIFIERS = {"const", "restrict", "__restrict__", "__restrict", "volatile",
+               "static", "register"}
+
 
 class ParseError(ValueError):
     pass
 
 
+@functools.lru_cache(maxsize=8192)
 def _sympify_ids(s: str) -> sympy.Expr:
     """sympify treating *every* identifier as a plain Symbol (otherwise
-    names like ``N`` resolve to sympy built-ins)."""
-    names = set(re.findall(r"[A-Za-z_]\w*", s))
+    names like ``N`` resolve to sympy built-ins).  Memoized: the same index
+    strings recur across declarations, bodies, and repeated parses."""
     try:
-        expr = sympy.sympify(s, locals={n: sympy.Symbol(n) for n in names})
+        expr = _sympify_ids_raw(s)
     except (sympy.SympifyError, SyntaxError, TypeError) as e:
         raise ParseError(f"bad index expression {s!r}: {e}")
     return sympy.expand(expr)
@@ -166,10 +178,16 @@ def parse_kernel(src: str, name: str = "kernel",
     dtype_bytes = 8
 
     # --- declarations -------------------------------------------------
-    while p.peek() in _TYPES:
+    while p.peek() in _TYPES or p.peek() in _QUALIFIERS:
+        while p.peek() in _QUALIFIERS:          # const double s; ...
+            p.next()
         ty = p.next()
+        if ty not in _TYPES:
+            raise ParseError(f"expected type after qualifier, got {ty!r}")
         dtype = _TYPES[ty]
         while True:
+            while p.peek() in _QUALIFIERS:      # double restrict a[...]; ...
+                p.next()
             var = p.next()
             if p.peek() == "[":
                 dims = []
@@ -181,6 +199,19 @@ def parse_kernel(src: str, name: str = "kernel",
                 dtype_bytes = dtype
             else:
                 scalars.add(var)
+                if p.peek() == "=":
+                    # scalar initializer (e.g. ``const double s = -0.25;``):
+                    # the value is register-resident setup, not kernel work —
+                    # validate it is a (possibly signed) constant and move on
+                    p.next()
+                    parts = []
+                    while p.peek() not in (",", ";", None):
+                        parts.append(p.next())
+                    init = "".join(parts)
+                    num = r"[-+]?(?:\d+\.?\d*|\.\d+)(?:[eE][-+]?\d+)?[fF]?"
+                    if not re.fullmatch(f"{num}(?:/{num})?", init):
+                        raise ParseError(
+                            f"unsupported initializer {init!r} for {var!r}")
             t = p.next()
             if t == ";":
                 break
@@ -192,29 +223,27 @@ def parse_kernel(src: str, name: str = "kernel",
     while p.peek() == "for":
         p.next()
         p.expect("(")
-        if p.peek() in ("int", "long", "unsigned", "size_t"):
+        while (p.peek() in ("int", "long", "unsigned", "size_t")
+               or p.peek() in _QUALIFIERS):
             p.next()
         var = sympy.Symbol(p.next())
         p.expect("=")
-        start = p._collect_until(";") if hasattr(p, "_collect_until") else None
         # collect start expr up to ';'
         parts = []
         while p.peek() != ";":
             parts.append(p.next())
         p.expect(";")
         start = _sympify_ids("".join(parts))
-        # condition: var < expr  (or <=)
+        # condition: var < expr  (or <=, tokenized as '<' then '=')
         cv = p.next()
         if cv != str(var):
             raise ParseError(f"loop condition must test {var}, got {cv!r}")
         cmp_op = p.next()
-        if cmp_op not in ("<",):
-            # support '<=' tokenized as '<','=' -- normalize
-            if cmp_op == "<" and p.peek() == "=":
-                p.next()
-                cmp_op = "<="
-            else:
-                raise ParseError(f"unsupported loop condition operator {cmp_op!r}")
+        if cmp_op == "<" and p.peek() == "=":
+            p.next()
+            cmp_op = "<="
+        elif cmp_op != "<":
+            raise ParseError(f"unsupported loop condition operator {cmp_op!r}")
         parts = []
         while p.peek() != ";":
             parts.append(p.next())

@@ -420,8 +420,30 @@ def analyze_hlo_text(hlo_text: str, default_group: int = 1,
 # ----------------------------------------------------------------------
 # Roofline report
 # ----------------------------------------------------------------------
+class TernaryRooflineTerms:
+    """Composition over the three TPU terms (``t_compute``, ``t_memory``,
+    ``t_collective``), shared by :class:`RooflineReport` and
+    :class:`HLORooflineResult`."""
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_total_overlapped(self) -> float:
+        """Roofline composition: everything overlaps (paper §1.2.1)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def t_total_serial(self) -> float:
+        """ECM composition: transfers serialize (paper §1.2.2)."""
+        return self.t_compute + self.t_memory + self.t_collective
+
+
 @dataclasses.dataclass
-class RooflineReport:
+class RooflineReport(TernaryRooflineTerms):
     arch: str
     shape: str
     mesh: str
@@ -441,22 +463,6 @@ class RooflineReport:
     memory_per_device: float      # from memory_analysis
     argument_bytes: float
     n_collectives: int
-
-    @property
-    def dominant(self) -> str:
-        terms = {"compute": self.t_compute, "memory": self.t_memory,
-                 "collective": self.t_collective}
-        return max(terms, key=terms.get)
-
-    @property
-    def t_total_overlapped(self) -> float:
-        """Roofline composition: everything overlaps (paper §1.2.1)."""
-        return max(self.t_compute, self.t_memory, self.t_collective)
-
-    @property
-    def t_total_serial(self) -> float:
-        """ECM composition: transfers serialize (paper §1.2.2)."""
-        return self.t_compute + self.t_memory + self.t_collective
 
     @property
     def useful_flop_ratio(self) -> float:
@@ -484,8 +490,122 @@ class RooflineReport:
 
 # TPU v5e constants (given in the task block)
 PEAK_FLOPS_BF16 = 197e12          # per chip
+PEAK_FLOPS_FP32 = 8.25e12         # per chip (VPU, non-matmul work)
 HBM_BW = 819e9                    # bytes/s per chip
 ICI_LINK_BW = 50e9                # bytes/s per link
+
+
+# ----------------------------------------------------------------------
+# Registry-conformant result: the "hlo-roofline" PerformanceModel output
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HLORooflineResult(TernaryRooflineTerms):
+    """Roofline terms of one HLO program against one machine — the Result
+    shape of the registered ``"hlo-roofline"`` model, with the same
+    ``to_dict()``/``from_dict()`` round-trip contract as ECM/Roofline
+    results (DESIGN.md §4)."""
+    program: str
+    machine: str
+    mxu_flops: float
+    vpu_flops: float
+    hbm_bytes: float
+    collective_wire_bytes: float
+    collective_by_kind: dict
+    n_collectives: int
+    peak_flops: float                 # MXU flop/s for the compute term
+    hbm_bandwidth: float              # bytes/s
+    ici_bandwidth: float              # bytes/s per link
+    vpu_peak_flops: float = PEAK_FLOPS_FP32   # non-matmul flop/s
+
+    @property
+    def total_flops(self) -> float:
+        return self.mxu_flops + self.vpu_flops
+
+    @property
+    def t_compute(self) -> float:
+        """MXU and VPU issue concurrently, so the compute term is the
+        slower unit — a VPU-only program (e.g. a pure stencil) still gets
+        a nonzero compute bound."""
+        t_mxu = self.mxu_flops / self.peak_flops if self.peak_flops else 0.0
+        t_vpu = self.vpu_flops / self.vpu_peak_flops \
+            if self.vpu_peak_flops else 0.0
+        return max(t_mxu, t_vpu)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bandwidth if self.hbm_bandwidth \
+            else 0.0
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_wire_bytes / self.ici_bandwidth \
+            if self.ici_bandwidth else 0.0
+
+    @property
+    def bottleneck(self) -> str:
+        return self.dominant
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.total_flops / self.hbm_bytes if self.hbm_bytes else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "model": "hlo-roofline",
+            "program": self.program,
+            "machine": self.machine,
+            "mxu_flops": self.mxu_flops,
+            "vpu_flops": self.vpu_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_by_kind": dict(self.collective_by_kind),
+            "n_collectives": self.n_collectives,
+            "peak_flops": self.peak_flops,
+            "hbm_bandwidth": self.hbm_bandwidth,
+            "ici_bandwidth": self.ici_bandwidth,
+            "vpu_peak_flops": self.vpu_peak_flops,
+            # derived, for consumers that only read the dict:
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "t_total_overlapped": self.t_total_overlapped,
+            "t_total_serial": self.t_total_serial,
+            "bottleneck": self.bottleneck,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HLORooflineResult":
+        return cls(program=str(d["program"]), machine=str(d["machine"]),
+                   mxu_flops=float(d["mxu_flops"]),
+                   vpu_flops=float(d["vpu_flops"]),
+                   hbm_bytes=float(d["hbm_bytes"]),
+                   collective_wire_bytes=float(d["collective_wire_bytes"]),
+                   collective_by_kind=dict(d["collective_by_kind"]),
+                   n_collectives=int(d["n_collectives"]),
+                   peak_flops=float(d["peak_flops"]),
+                   hbm_bandwidth=float(d["hbm_bandwidth"]),
+                   ici_bandwidth=float(d["ici_bandwidth"]),
+                   vpu_peak_flops=float(
+                       d.get("vpu_peak_flops", PEAK_FLOPS_FP32)))
+
+
+def roofline_result(analysis: HLOAnalysis, *, program: str = "hlo",
+                    machine_name: str = "tpu-v5e",
+                    peak_flops: float = PEAK_FLOPS_BF16,
+                    hbm_bandwidth: float = HBM_BW,
+                    ici_bandwidth: float = ICI_LINK_BW,
+                    vpu_peak_flops: float = PEAK_FLOPS_FP32,
+                    ) -> HLORooflineResult:
+    """Package an :class:`HLOAnalysis` as the registry-conformant result."""
+    return HLORooflineResult(
+        program=program, machine=machine_name,
+        mxu_flops=analysis.mxu_flops, vpu_flops=analysis.vpu_flops,
+        hbm_bytes=analysis.hbm_bytes,
+        collective_wire_bytes=analysis.collective_wire_bytes,
+        collective_by_kind=dict(analysis.collective_by_kind),
+        n_collectives=len(analysis.schedule),
+        peak_flops=peak_flops, hbm_bandwidth=hbm_bandwidth,
+        ici_bandwidth=ici_bandwidth, vpu_peak_flops=vpu_peak_flops)
 
 
 def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh: str,

@@ -10,19 +10,30 @@ in-core model, ECM, Roofline, blocking) consumes it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from typing import Iterable, Sequence
 
 import sympy
 
 
-def sympify_ids(s) -> sympy.Expr:
-    """sympify treating every identifier as a plain Symbol (names like ``N``
-    otherwise resolve to sympy built-ins)."""
-    if not isinstance(s, str):
-        return sympy.sympify(s)
+@functools.lru_cache(maxsize=8192)
+def _sympify_str(s: str) -> sympy.Expr:
     names = set(re.findall(r"[A-Za-z_]\w*", s))
     return sympy.sympify(s, locals={n: sympy.Symbol(n) for n in names})
+
+
+def sympify_ids(s) -> sympy.Expr:
+    """sympify treating every identifier as a plain Symbol (names like ``N``
+    otherwise resolve to sympy built-ins).
+
+    String inputs are memoized: sweeps rebuild kernels from the same index
+    strings at every parameter point, and sympy parsing dominates that
+    construction.  sympy expressions are immutable, so sharing is safe.
+    """
+    if not isinstance(s, str):
+        return sympy.sympify(s)
+    return _sympify_str(s)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,6 +14,7 @@ Two families of machines are shipped in ``repro/configs/machines``:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import pathlib
 from typing import Any
@@ -232,8 +233,13 @@ class Machine:
             return cls.from_dict(yaml.safe_load(f))
 
 
+@functools.lru_cache(maxsize=64)
 def load(name: str) -> Machine:
-    """Load a bundled machine description by short name, e.g. ``IVY``/``V5E``."""
+    """Load a bundled machine description by short name, e.g. ``IVY``/``V5E``.
+
+    Memoized: Machine is frozen, and warm ``analyze(src, "IVY", ...)`` loops
+    must not re-read YAML per call.
+    """
     aliases = {
         "IVY": "ivybridge_ep.yaml",
         "IVY122": "ivybridge_ep_sec122.yaml",

@@ -21,6 +21,7 @@ import abc
 from typing import Protocol, runtime_checkable
 
 from . import ecm as _ecm
+from . import hlo_analysis as _hlo
 from . import roofline as _roofline
 from .kernel_ir import LoopKernel
 from .machine import Machine
@@ -34,18 +35,26 @@ class Result(Protocol):
 
 
 class PerformanceModel(abc.ABC):
-    """One analytic performance model over a :class:`LoopKernel`.
+    """One analytic performance model over a kernel object.
 
-    ``analyze`` accepts the uniform option set (``predictor``, ``cores``,
-    ``sim_kwargs``) plus the shared-work shortcuts ``volumes`` and
-    ``incore_result``; concrete models forward them to their module-level
-    ``model()`` functions, which remain usable directly.
+    ``input_kind`` declares what the model consumes — ``"loop"`` for the
+    affine :class:`LoopKernel` IR (every frontend but ``hlo`` produces it),
+    ``"hlo"`` for :class:`~repro.core.frontends.hlo.HLOProgram` — so the
+    session and the unified ``analyze`` entry point can check frontend/model
+    compatibility up front.
+
+    For loop models, ``analyze`` accepts the uniform option set
+    (``predictor``, ``cores``, ``sim_kwargs``) plus the shared-work
+    shortcuts ``volumes`` and ``incore_result``; concrete models forward
+    them to their module-level ``model()`` functions, which remain usable
+    directly.
     """
 
     name: str = "?"
+    input_kind: str = "loop"
 
     @abc.abstractmethod
-    def analyze(self, kernel: LoopKernel, machine: Machine, **opts) -> Result:
+    def analyze(self, kernel, machine: Machine, **opts) -> Result:
         ...
 
 
@@ -93,6 +102,55 @@ class RooflineIACAModel(RooflineModel):
     variant = "IACA"
 
 
+@register_model
+class HLORooflineModel(PerformanceModel):
+    """Kerncraft-for-XLA roofline over a compiled HLO module (DESIGN.md §7).
+
+    Consumes the ``hlo`` frontend's :class:`~repro.core.frontends.hlo
+    .HLOProgram` instead of a loop kernel; machine constants come from the
+    TPU fields of the machine description (``peak flops``, ``hbm
+    bandwidth``, ``ici link bandwidth``).  A machine with none of those
+    fields (an x86 cache machine like IVY) is rejected rather than silently
+    costed with v5e numbers, as is a ``dtype`` the machine has no peak for.
+    """
+
+    name = "hlo-roofline"
+    input_kind = "hlo"
+
+    def analyze(self, program, machine: Machine,
+                dtype: str = "BF16", **opts) -> _hlo.HLORooflineResult:
+        if opts:
+            raise TypeError(
+                f"hlo-roofline got unknown options {sorted(opts)}")
+        if not hasattr(program, "text"):
+            raise TypeError(
+                "hlo-roofline consumes an HLOProgram (use the 'hlo' "
+                f"frontend), got {type(program).__name__}")
+        if not machine.peak_flops and not machine.hbm_bandwidth:
+            raise ValueError(
+                f"machine {machine.name!r} carries no TPU fields "
+                "('peak flops', 'hbm bandwidth'); hlo-roofline needs a "
+                "TPU machine description (e.g. V5E)")
+        if machine.peak_flops:
+            peak = machine.peak_flops.get(dtype.upper())
+            if peak is None:
+                raise ValueError(
+                    f"machine {machine.name!r} has no peak flops for dtype "
+                    f"{dtype!r}; available: {sorted(machine.peak_flops)}")
+        else:                         # hbm given, peak table absent
+            peak = _hlo.PEAK_FLOPS_BF16
+        ana = _hlo.analyze_hlo_text(
+            program.text, default_group=program.default_group,
+            assume_rs_rewrite=program.assume_rs_rewrite)
+        vpu_peak = machine.peak_flops.get("FP32") or _hlo.PEAK_FLOPS_FP32
+        return _hlo.roofline_result(
+            ana, program=program.name, machine_name=machine.name,
+            peak_flops=peak,
+            hbm_bandwidth=machine.hbm_bandwidth or _hlo.HBM_BW,
+            ici_bandwidth=machine.ici_link_bandwidth or _hlo.ICI_LINK_BW,
+            vpu_peak_flops=vpu_peak)
+
+
 def resolve_model(name: str) -> PerformanceModel:
     try:
         return MODEL_REGISTRY[name.lower()]
@@ -102,8 +160,8 @@ def resolve_model(name: str) -> PerformanceModel:
             f"available: {sorted(MODEL_REGISTRY)}") from None
 
 
-def analyze(model: str, kernel: LoopKernel, machine: Machine,
-            **opts) -> Result:
-    """Resolve ``model`` by registry name and run it — the functional entry
-    point used by benchmarks and examples."""
+def analyze(model: str, kernel, machine: Machine, **opts) -> Result:
+    """Resolve ``model`` by registry name and run it over an already-built
+    kernel object.  The frontend-aware, memoizing entry point is
+    :func:`repro.core.analyze` (see :mod:`repro.core.api`)."""
     return resolve_model(model).analyze(kernel, machine, **opts)

@@ -6,9 +6,12 @@ import json
 
 from . import layer_conditions
 from .ecm import ECMResult
+from .hlo_analysis import HLORooflineResult
 from .kernel_ir import LoopKernel
 from .machine import Machine
 from .roofline import RooflineResult
+
+AnyResult = ECMResult | RooflineResult | HLORooflineResult
 
 
 def _gf(x: float) -> str:
@@ -43,37 +46,78 @@ def roofline_report(res: RooflineResult, cores: int = 1) -> str:
     return "\n".join(lines)
 
 
+def _eng(x: float) -> str:
+    for div, unit in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(x) >= div:
+            return f"{x / div:.2f} {unit}"
+    return f"{x:.2f} "
+
+
+def hlo_report(res: HLORooflineResult) -> str:
+    """Text report for the ``hlo-roofline`` model: the three TPU roofline
+    terms plus the collective breakdown."""
+    lines = ["-" * 22 + " HLO Roofline " + "-" * 22,
+             f"program {res.program} on {res.machine}",
+             f"  MXU flops   {_eng(res.mxu_flops)}FLOP   "
+             f"(VPU {_eng(res.vpu_flops)}FLOP)",
+             f"  HBM bytes   {_eng(res.hbm_bytes)}B",
+             f"  wire bytes  {_eng(res.collective_wire_bytes)}B over "
+             f"{res.n_collectives} collectives"]
+    for kind, b in sorted(res.collective_by_kind.items()):
+        lines.append(f"      {kind:<24} {_eng(b)}B")
+    lines += [f"  T_compute    {res.t_compute * 1e6:10.3f} us",
+              f"  T_memory     {res.t_memory * 1e6:10.3f} us",
+              f"  T_collective {res.t_collective * 1e6:10.3f} us",
+              f"bound: {res.bottleneck}  "
+              f"(overlapped {res.t_total_overlapped * 1e6:.3f} us, "
+              f"serial {res.t_total_serial * 1e6:.3f} us); "
+              f"AI {res.arithmetic_intensity:.2f} FLOP/B"]
+    return "\n".join(lines)
+
+
 # ----------------------------------------------------------------------
 # Machine-readable output: JSON round-trip for every model result
 # ----------------------------------------------------------------------
 
-def to_json(res: ECMResult | RooflineResult) -> str:
+def to_json(res: AnyResult) -> str:
     """Serialize any model result through its ``to_dict()``."""
     return json.dumps(res.to_dict(), indent=2, sort_keys=True)
 
 
-def result_from_dict(d: dict) -> ECMResult | RooflineResult:
+def result_from_dict(d: dict) -> AnyResult:
     """Rebuild a result object from its ``to_dict()`` form (the ``model``
     field dispatches, matching MODEL_REGISTRY names)."""
     model = d.get("model", "")
     if model == "ecm":
         return ECMResult.from_dict(d)
+    if model == "hlo-roofline":
+        return HLORooflineResult.from_dict(d)
     if model.startswith("roofline"):
         return RooflineResult.from_dict(d)
-    raise ValueError(f"cannot rebuild result for model {model!r}")
+    raise ValueError(
+        f"cannot rebuild result for model {model!r}; "
+        "known: ['ecm', 'hlo-roofline', 'roofline', 'roofline-iaca']")
 
 
-def from_json(s: str) -> ECMResult | RooflineResult:
+def from_json(s: str) -> AnyResult:
     return result_from_dict(json.loads(s))
 
 
-def json_report(res: ECMResult | RooflineResult) -> str:
+def text_report(res: AnyResult, cores: int = 1) -> str:
+    """Dispatch to the right text renderer for any model result."""
+    if isinstance(res, ECMResult):
+        return ecm_report(res)
+    if isinstance(res, HLORooflineResult):
+        return hlo_report(res)
+    if isinstance(res, RooflineResult):
+        return roofline_report(res, cores=cores)
+    raise TypeError(f"no text report for {type(res).__name__}")
+
+
+def json_report(res: AnyResult) -> str:
     """Render the human report from a JSON round-trip of the result — the
     serialized form must carry everything the text reports need."""
-    rebuilt = from_json(to_json(res))
-    if isinstance(rebuilt, ECMResult):
-        return ecm_report(rebuilt)
-    return roofline_report(rebuilt)
+    return text_report(from_json(to_json(res)))
 
 
 def lc_report(kernel: LoopKernel, machine: Machine, symbol: str = "N") -> str:

@@ -32,7 +32,7 @@ from . import incore
 from .incore import InCoreResult
 from .kernel_ir import LoopKernel
 from .machine import Machine
-from .model_api import Result, resolve_model
+from .model_api import MODEL_REGISTRY, Result, resolve_model
 from .predictors import VolumePrediction, predict_volumes
 
 
@@ -96,6 +96,21 @@ def kernel_key(kernel: LoopKernel) -> tuple:
         (kernel.flops.add, kernel.flops.mul, kernel.flops.div,
          kernel.flops.fma),
     )
+
+
+def source_key(kernel) -> tuple:
+    """Structural identity of any frontend output: :class:`LoopKernel` via
+    :func:`kernel_key`, anything else through its ``cache_key()`` (the
+    :class:`~repro.core.frontends.KernelSource` contract)."""
+    if isinstance(kernel, LoopKernel):
+        return kernel_key(kernel)
+    ck = getattr(kernel, "cache_key", None)
+    if callable(ck):
+        return ck()
+    raise TypeError(
+        f"cannot key analysis source of type {type(kernel).__name__}: "
+        "expected a LoopKernel or an object with cache_key() — build it "
+        "through repro.core.frontends.load_kernel")
 
 
 def _freeze(v):
@@ -182,15 +197,42 @@ class AnalysisSession:
         self._volumes[key] = res
         return res
 
-    def analyze(self, kernel: LoopKernel, model: str = "ecm",
+    def analyze(self, kernel, model: str = "ecm",
                 predictor: str | None = None, cores: int | None = None,
                 sim_kwargs: dict | None = None, **opts) -> Result:
         """Memoized full model run, routed through :data:`MODEL_REGISTRY`.
 
-        On a miss the model receives the session's memoized volumes and
-        in-core result, so several models over one kernel share both.
+        ``kernel`` is any frontend output.  For loop models, a miss feeds
+        the model the session's memoized volumes and in-core result, so
+        several models over one kernel share both; non-loop models (e.g.
+        ``hlo-roofline``) skip the predictor tiers — the predictor switch
+        does not apply to them — but still memoize full results.
         """
         m = resolve_model(model)
+        if m.input_kind != "loop":
+            if isinstance(kernel, LoopKernel):
+                raise TypeError(
+                    f"model {m.name!r} consumes {m.input_kind!r} sources, "
+                    "not LoopKernel IR; load the source through the "
+                    f"{m.input_kind!r} frontend")
+            key = (m.name, source_key(kernel), self.machine.name,
+                   _freeze(opts))
+            hit = self._results.get(key)
+            if hit is not None:
+                self.stats.result_hits += 1
+                return hit
+            self.stats.result_misses += 1
+            res = m.analyze(kernel, self.machine, **opts)
+            self._results[key] = res
+            return res
+        if not isinstance(kernel, LoopKernel):
+            loop_models = sorted(
+                n for n, mm in MODEL_REGISTRY.items()
+                if mm.input_kind != "loop")
+            raise TypeError(
+                f"model {m.name!r} consumes LoopKernel IR, got "
+                f"{type(kernel).__name__}; use one of the non-loop models "
+                f"{loop_models} or a loop frontend (c/builder/trace)")
         predictor, cores, sim_kwargs = self._defaults(predictor, cores,
                                                       sim_kwargs)
         key = (m.name, kernel_key(kernel), self.machine.name,
@@ -219,6 +261,10 @@ class AnalysisSession:
         predictor volumes and in-core analysis are computed once and shared
         by all requested models; repeating the sweep hits the result cache.
         """
+        if not isinstance(kernel, LoopKernel):
+            raise TypeError(
+                "sweep() varies symbolic loop constants, which only "
+                f"LoopKernel sources carry (got {type(kernel).__name__})")
         out: dict[str, list[Result]] = {str(m): [] for m in models}
         for v in values:
             bound = kernel.bind(**{param: int(v)})

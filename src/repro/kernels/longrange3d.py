@@ -21,7 +21,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.frontends.trace import kernel_spec
+
 RADIUS = 4
+
+
+@kernel_spec(name="3d-long-range",
+             arrays={"U": ("M", "N", "N"), "V": ("M", "N", "N"),
+                     "ROC": ("M", "N", "N")},
+             loops=[("k", 4, "M-4"), ("j", 4, "N-4"), ("i", 4, "N-4")],
+             element_bytes=8)
+def point(U, V, ROC, c, k, j, i):
+    """One innermost iteration of the long-range stencil — traces to the
+    same :class:`LoopKernel` IR as the paper's Listing-3 C file
+    (``configs/stencils/stencil_3d_long_range.c``): 25 reads of ``V`` plus
+    ``U``/``ROC`` at the center, one write of ``U``, 15 muls + 26 adds.
+    The ``range`` loop unrolls at trace time, mirroring the C body's
+    textual sum."""
+    lap = c[0] * V[k, j, i]
+    for d in range(1, RADIUS + 1):
+        lap = (lap + c[d] * (V[k, j, i + d] + V[k, j, i - d])
+                   + c[d] * (V[k, j + d, i] + V[k, j - d, i])
+                   + c[d] * (V[k + d, j, i] + V[k - d, j, i]))
+    U[k, j, i] = 2.0 * V[k, j, i] - U[k, j, i] + ROC[k, j, i] * lap
 
 
 def _kernel(*refs):

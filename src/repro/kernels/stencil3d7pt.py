@@ -21,6 +21,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.frontends.trace import kernel_spec
+
+
+@kernel_spec(name="3d-7pt",
+             arrays={"a": ("M", "N", "N"), "b": ("M", "N", "N")},
+             loops=[("k", 1, "M-1"), ("j", 1, "N-1"), ("i", 1, "N-1")],
+             element_bytes=8)
+def point(a, b, w, k, j, i):
+    """One innermost iteration of the stencil — the analyzable face of the
+    Pallas kernel below.  Tracing this through the ``trace`` frontend yields
+    the same :class:`LoopKernel` IR as parsing the paper's Listing-1 C file
+    (``configs/stencils/stencil_3d7pt.c``): 7 affine reads of ``a``, one
+    write of ``b``, 7 muls + 6 adds.  ``element_bytes=8`` matches the C
+    double; analyze with ``frontend_opts={"element_bytes": 4}`` for the
+    float32 the TPU kernel actually runs."""
+    b[k, j, i] = (w.wC * a[k, j, i]
+                  + w.wW * a[k, j, i - 1] + w.wE * a[k, j, i + 1]
+                  + w.wS * a[k, j - 1, i] + w.wN * a[k, j + 1, i]
+                  + w.wB * a[k - 1, j, i] + w.wF * a[k + 1, j, i])
+
 
 def _kernel(prev_ref, cur_ref, nxt_ref, coef_ref, out_ref):
     k = pl.program_id(0)

@@ -1,0 +1,363 @@
+"""Tests for the kernel-frontend registry (DESIGN.md §7): detection and
+dispatch, C/trace frontend parity down to identical structural keys and
+bit-identical ECM results, the builder/hlo frontends, the unified
+repro.core.analyze() entry point, and the c_parser/sympify satellites."""
+import pathlib
+
+import pytest
+import sympy
+
+from repro.core import (FRONTEND_REGISTRY, LoopKernel, analyze, kernel_ir,
+                        load_kernel, load_machine, parse_kernel,
+                        resolve_frontend, sweep)
+from repro.core.c_parser import ParseError
+from repro.core.frontends import HLOProgram, detect_frontend
+from repro.core.frontends.trace import (ScalarBag, TraceError, kernel_spec,
+                                        trace_kernel)
+from repro.core.kernel_ir import FlopCount
+from repro.core.session import AnalysisSession, kernel_key, source_key
+from repro.kernels.longrange3d import point as longrange_point
+from repro.kernels.stencil3d7pt import point as stencil7_point
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+C_7PT = (STENCILS / "stencil_3d7pt.c").read_text()
+SIZES = {"M": 130, "N": 100}
+
+
+@pytest.fixture(scope="module")
+def ivy():
+    return load_machine("IVY")
+
+
+# ----------------------------------------------------------------------
+class TestRegistry:
+    def test_contents(self):
+        assert set(FRONTEND_REGISTRY) == {"c", "builder", "trace", "hlo"}
+
+    def test_case_insensitive(self):
+        assert resolve_frontend("C") is FRONTEND_REGISTRY["c"]
+
+    def test_unknown_frontend_lists_available(self):
+        with pytest.raises(ValueError, match=r"unknown kernel frontend.*"
+                                             r"builder.*c.*hlo.*trace"):
+            resolve_frontend("fortran")
+
+    def test_detection(self):
+        assert detect_frontend(C_7PT).name == "c"
+        assert detect_frontend("stencil_3d7pt.c").name == "c"
+        assert detect_frontend(stencil7_point).name == "trace"
+        assert detect_frontend("trace:stencil3d7pt").name == "trace"
+        assert detect_frontend("HloModule m\nENTRY %e () -> f32[] {\n}")\
+            .name == "hlo"
+        k = parse_kernel(C_7PT, constants=SIZES)
+        assert detect_frontend(k).name == "builder"
+
+        class FakeCompiled:
+            def as_text(self):
+                return "HloModule fake"
+        assert detect_frontend(FakeCompiled()).name == "hlo"
+
+    def test_detection_failure_mentions_frontends(self):
+        with pytest.raises(ValueError, match="no registered frontend"):
+            detect_frontend(12345)
+
+
+# ----------------------------------------------------------------------
+class TestCFrontend:
+    def test_text_and_path_agree(self):
+        via_text = load_kernel(C_7PT, name="3d-7pt", constants=SIZES)
+        via_path = load_kernel("configs/stencils/stencil_3d7pt.c",
+                               name="3d-7pt", constants=SIZES)
+        via_bare = load_kernel("stencil_3d7pt.c", name="3d-7pt",
+                               constants=SIZES)
+        assert kernel_key(via_text) == kernel_key(via_path) \
+            == kernel_key(via_bare)
+
+    def test_default_name_is_stem(self):
+        k = load_kernel("stencil_3d7pt.c")
+        assert k.name == "stencil_3d7pt"
+
+    def test_missing_file(self):
+        with pytest.raises(FileNotFoundError, match="nosuch.c"):
+            load_kernel("nosuch.c", frontend="c")
+
+
+class TestBuilderFrontend:
+    def test_passthrough_binds_constants(self):
+        k = parse_kernel(C_7PT, name="x")
+        out = load_kernel(k, constants={"M": 8, "N": 16})
+        assert isinstance(out, LoopKernel)
+        assert out.constants == {"M": 8, "N": 16}
+        assert k.constants == {}          # original untouched
+
+    def test_make_stencil_kwargs(self):
+        spec = dict(
+            name="copy", arrays={"a": ("N",), "b": ("N",)},
+            loop_spec=[("i", 0, "N")],
+            reads=[("a", "i")], writes=[("b", "i")],
+            flops=FlopCount(add=1))
+        k = load_kernel(spec, constants={"N": 64})
+        assert k.name == "copy" and k.constants == {"N": 64}
+        assert len(k.accesses) == 2
+
+
+# ----------------------------------------------------------------------
+class TestTraceFrontend:
+    def test_7pt_parity_ir(self):
+        """Acceptance: traced JAX point function == parsed C file, same
+        accesses and flops — identical structural identity."""
+        kc = parse_kernel(C_7PT, name="3d-7pt", constants=SIZES)
+        kt = load_kernel(stencil7_point, name="3d-7pt", constants=SIZES)
+        assert kt.flops == kc.flops == FlopCount(add=6, mul=7)
+        assert [(a.array.name, tuple(map(str, a.index)), a.is_write)
+                for a in kt.accesses] == \
+               [(a.array.name, tuple(map(str, a.index)), a.is_write)
+                for a in kc.accesses]
+        assert kernel_key(kt) == kernel_key(kc)
+
+    def test_longrange_parity_ir(self):
+        src = (STENCILS / "stencil_3d_long_range.c").read_text()
+        kc = parse_kernel(src, name="3d-long-range", constants=SIZES)
+        kt = load_kernel(longrange_point, name="3d-long-range",
+                         constants=SIZES)
+        assert kt.flops == kc.flops == FlopCount(add=26, mul=15)
+        assert kernel_key(kt) == kernel_key(kc)
+
+    def test_7pt_parity_ecm_bit_identical(self, ivy):
+        """Acceptance: bit-identical ECM to_dict() through analyze()."""
+        e_c = analyze("configs/stencils/stencil_3d7pt.c", ivy, model="ecm",
+                      predictor="LC", name="3d-7pt", constants=SIZES)
+        e_t = analyze(stencil7_point, ivy, model="ecm", predictor="LC",
+                      name="3d-7pt", constants=SIZES)
+        assert e_c.to_dict() == e_t.to_dict()
+
+    def test_jaxpr_flop_counting_agrees(self):
+        jax = pytest.importorskip("jax")  # noqa: F841
+        for fn in (stencil7_point, longrange_point):
+            dag = trace_kernel(fn, flops="dag")
+            jx = trace_kernel(fn, flops="jaxpr")
+            assert dag.flops == jx.flops
+
+    def test_shared_subexpression_counted_once(self):
+        @kernel_spec(name="shared", arrays={"a": ("N",), "b": ("N",)},
+                     loops=[("i", 0, "N")])
+        def fn(a, b, s, i):
+            t = a[i] * 2.0          # one mul, reused twice
+            b[i] = t + t
+        k = trace_kernel(fn)
+        assert k.flops == FlopCount(add=1, mul=1)
+
+    def test_augmented_assignment(self):
+        @kernel_spec(name="acc", arrays={"a": ("N",), "b": ("N",)},
+                     loops=[("i", 0, "N")])
+        def fn(a, b, i):
+            b[i] += a[i]
+        k = trace_kernel(fn)
+        assert k.flops == FlopCount(add=1)
+        refs = [(a.array.name, a.is_write) for a in k.accesses]
+        assert ("b", False) in refs and ("b", True) in refs
+
+    def test_scalar_bag_free(self):
+        bag = ScalarBag()
+        assert bag.anything is not bag.anything   # fresh leaves
+        assert bag[3] is not bag[3]
+
+    def test_string_reference(self):
+        k = load_kernel("trace:stencil3d7pt", constants=SIZES)
+        assert k.name == "3d-7pt"
+        k2 = load_kernel("trace:repro.kernels.longrange3d:point")
+        assert k2.name == "3d-long-range"
+
+    def test_errors(self):
+        with pytest.raises(TraceError, match="no @kernel_spec"):
+            trace_kernel(lambda a, i: None)
+
+        @kernel_spec(name="slice", arrays={"a": ("N",)},
+                     loops=[("i", 0, "N")])
+        def sliced(a, i):
+            a[0:2]
+        with pytest.raises(TraceError, match="slicing"):
+            trace_kernel(sliced)
+
+        @kernel_spec(name="branch", arrays={"a": ("N",), "b": ("N",)},
+                     loops=[("i", 0, "N")])
+        def branchy(a, b, i):
+            b[i] = a[i] if a[i] > 0 else 0.0
+        with pytest.raises(TraceError, match="compar|branch"):
+            trace_kernel(branchy)
+
+        @kernel_spec(name="nowrite", arrays={"a": ("N",)},
+                     loops=[("i", 0, "N")])
+        def nowrite(a, i):
+            a[i] + 1.0
+        with pytest.raises(TraceError, match="no array write"):
+            trace_kernel(nowrite)
+
+        with pytest.raises(TraceError, match="cannot import"):
+            load_kernel("trace:definitely_not_a_module")
+
+    def test_spec_array_must_appear_in_signature(self):
+        """A typo'd array parameter must fail loudly, not silently drop all
+        of that array's accesses from the model."""
+        @kernel_spec(name="typo", arrays={"a": ("N",), "b": ("N",)},
+                     loops=[("i", 0, "N")])
+        def fn(A, b, i):              # 'A' != spec's 'a'
+            b[i] = A[i] * 2.0
+        with pytest.raises(TraceError, match=r"\['a'\].*signature"):
+            trace_kernel(fn)
+
+    def test_subscript_count_strict(self):
+        @kernel_spec(name="overdim", arrays={"a": ("N",), "b": ("N",)},
+                     loops=[("k", 0, "N"), ("i", 0, "N")])
+        def fn(a, b, k, i):
+            b[i] = a[k, i]            # 2 subscripts into a 1-D array
+        with pytest.raises(TraceError, match="2 subscripts for 1-D"):
+            trace_kernel(fn)
+
+    def test_flattened_1d_access_ok(self):
+        @kernel_spec(name="flat", arrays={"a": ("M*N",), "b": ("M*N",)},
+                     loops=[("j", 0, "M"), ("i", 0, "N")])
+        def fn(a, b, j, i):
+            b[j * sympy.Symbol("N") + i] = a[j * sympy.Symbol("N") + i]
+        k = trace_kernel(fn)
+        assert str(k.accesses[0].index[0]) == "N*j + i"
+
+
+# ----------------------------------------------------------------------
+class TestHLOFrontend:
+    HLO = "HloModule m\n\nENTRY %main (p: f32[8]) -> f32[8] {\n" \
+          "  %p = f32[8]{0} parameter(0)\n" \
+          "  ROOT %o = f32[8]{0} add(%p, %p)\n}\n"
+
+    def test_text_and_compiled(self):
+        prog = load_kernel(self.HLO, name="toy")
+        assert isinstance(prog, HLOProgram) and prog.name == "toy"
+
+        class FakeCompiled:
+            def as_text(self):
+                return TestHLOFrontend.HLO
+        prog2 = load_kernel(FakeCompiled(), name="toy")
+        assert prog2.cache_key() == prog.cache_key()
+
+    def test_path(self, tmp_path):
+        p = tmp_path / "dump.hlo"
+        p.write_text(self.HLO)
+        prog = load_kernel(str(p))
+        assert prog.name == "dump"
+        assert prog.text == self.HLO
+
+    def test_constants_rejected(self):
+        with pytest.raises(TypeError, match="no symbolic constants"):
+            load_kernel(self.HLO, constants={"N": 4})
+
+    def test_source_key_requires_contract(self):
+        with pytest.raises(TypeError, match="cache_key"):
+            source_key(object())
+
+
+# ----------------------------------------------------------------------
+class TestUnifiedAnalyze:
+    def test_machine_by_name_and_object(self, ivy):
+        a = analyze(C_7PT, "IVY", name="3d-7pt", constants=SIZES)
+        b = analyze(C_7PT, ivy, name="3d-7pt", constants=SIZES)
+        assert a.to_dict() == b.to_dict()
+
+    def test_pooled_session_is_shared(self, ivy):
+        a = analyze(C_7PT, ivy, name="3d-7pt", constants=SIZES)
+        b = analyze(C_7PT, ivy, name="3d-7pt", constants=SIZES)
+        assert a is b                     # same memoized result object
+
+    def test_explicit_session(self, ivy):
+        sess = AnalysisSession(ivy)
+        a = analyze(C_7PT, ivy, name="3d-7pt", constants=SIZES,
+                    session=sess)
+        assert sess.stats.result_misses == 1
+        b = analyze(C_7PT, ivy, name="3d-7pt", constants=SIZES,
+                    session=sess)
+        assert a is b and sess.stats.result_hits == 1
+
+    def test_session_machine_mismatch(self, ivy):
+        sess = AnalysisSession(load_machine("V5E"))
+        with pytest.raises(ValueError, match="bound to machine"):
+            analyze(C_7PT, ivy, session=sess, constants=SIZES)
+
+    def test_sweep_entry_point(self, ivy):
+        out = sweep(C_7PT, ivy, "N", [50, 60], models=["ecm"],
+                    name="3d-7pt", constants={"M": 20})
+        assert len(out["ecm"]) == 2
+        assert all(hasattr(r, "t_ecm") for r in out["ecm"])
+
+    def test_model_frontend_mismatch(self, ivy):
+        with pytest.raises(TypeError, match="consumes LoopKernel IR"):
+            analyze(TestHLOFrontend.HLO, ivy, model="ecm")
+        with pytest.raises(TypeError, match="consumes 'hlo' sources"):
+            analyze(C_7PT, ivy, model="hlo-roofline", constants=SIZES)
+
+
+# ----------------------------------------------------------------------
+class TestCParserSatellites:
+    def test_qualifiers_and_initializers(self):
+        src = """
+        const double a[M][N];
+        double restrict b[M][N];
+        static const double s = -0.25, t = 1.0;
+        for (int j = 1; j < M - 1; j++) {
+          for (const unsigned int i = 1; i < N - 1; i++) {
+            b[j][i] = -1.5 * a[j][i] + s * (a[j][i-1] + a[j][i+1]) - t;
+          }
+        }
+        """
+        k = parse_kernel(src, constants={"M": 64, "N": 64})
+        assert set(k.arrays) == {"a", "b"}
+        assert k.flops == FlopCount(add=3, mul=2)
+        assert len(k.reads()) == 3 and len(k.writes()) == 1
+
+    def test_unary_minus_on_literals(self):
+        src = """
+        double a[N], b[N];
+        for (int i = 0; i < N; i++) {
+          b[i] = -2.0 * a[i] / -4.0;
+        }
+        """
+        k = parse_kernel(src, constants={"N": 32})
+        assert k.flops == FlopCount(mul=1, div=1)
+
+    def test_le_loop_condition(self):
+        """'i <= N - 2' must parse as an inclusive bound (stop = N - 1)."""
+        src = """
+        double a[N], b[N];
+        for (int i = 1; i <= N - 2; i++) { b[i] = 2.0 * a[i]; }
+        """
+        k = parse_kernel(src, constants={"N": 32})
+        assert str(k.loops[0].stop) == "N - 1"
+        assert k.total_iterations() == 30
+
+    def test_scientific_and_ratio_initializers(self):
+        src = """
+        double a[N], b[N];
+        const double s = 2.5e-3, t = 1.0/6.0, u = -1E+2f;
+        for (int i = 0; i < N; i++) { b[i] = s * a[i]; }
+        """
+        k = parse_kernel(src, constants={"N": 32})
+        assert k.flops == FlopCount(mul=1)
+
+    def test_bad_initializer_rejected(self):
+        with pytest.raises(ParseError, match="initializer"):
+            parse_kernel("double s = foo(); for (int i = 0; i < N; i++) "
+                         "{ s = 1.0; }")
+
+
+class TestSympifyMemoization:
+    def test_cache_returns_shared_expr(self):
+        a = kernel_ir.sympify_ids("M*N + i - 1")
+        b = kernel_ir.sympify_ids("M*N + i - 1")
+        assert a is b                     # lru_cache hit, not a re-parse
+        assert a == sympy.Symbol("M") * sympy.Symbol("N") \
+            + sympy.Symbol("i") - 1
+
+    def test_non_string_passthrough(self):
+        assert kernel_ir.sympify_ids(7) == sympy.Integer(7)
+        s = sympy.Symbol("x")
+        assert kernel_ir.sympify_ids(s) == s

@@ -130,3 +130,168 @@ def test_roofline_report_terms():
     d = rep.to_dict()
     assert {"t_compute", "t_memory", "t_collective",
             "roofline_fraction"} <= set(d)
+
+
+# ----------------------------------------------------------------------
+# Collective wire models through real HLO text (satellite: every kind's
+# byte formula, plus while-loop trip-count multiplication)
+# ----------------------------------------------------------------------
+
+def _entry(body_lines: str) -> str:
+    return ("HloModule m\n\n"
+            "ENTRY %main (p: f32[1024]) -> f32[1024] {\n"
+            "  %p = f32[1024]{0} parameter(0)\n"
+            f"{body_lines}"
+            "}\n")
+
+
+_KB4 = 1024 * 4          # result bytes of an f32[1024]
+
+
+@pytest.mark.parametrize("kind, wire", [
+    # ring wire models over a group of 4, f32[1024] result = 4096 B
+    ("all-reduce", 2 * 3 / 4 * _KB4),
+    ("all-gather", 3 / 4 * _KB4),
+    ("reduce-scatter", 3 * _KB4),
+    ("all-to-all", 3 / 4 * _KB4),
+    ("collective-permute", float(_KB4)),
+])
+def test_collective_bytes_in_hlo_text(kind, wire):
+    txt = _entry(
+        f"  ROOT %c = f32[1024]{{0}} {kind}(%p), "
+        "replica_groups={{0,1,2,3}}, to_apply=%sum\n")
+    # disable the AR->RS recost so the raw ring formula is visible
+    ana = H.analyze_hlo_text(txt, assume_rs_rewrite=False)
+    assert ana.collective_wire_bytes == pytest.approx(wire)
+    assert dict(ana.collective_by_kind) == {kind: pytest.approx(wire)}
+    [rec] = ana.schedule
+    assert rec.kind == kind and rec.group_size == 4 and rec.multiplier == 1
+
+
+def test_collective_group_of_one_is_free():
+    txt = _entry("  ROOT %c = f32[1024]{0} all-reduce(%p), "
+                 "replica_groups={{0}}, to_apply=%sum\n")
+    assert H.analyze_hlo_text(txt).collective_wire_bytes == 0.0
+
+
+def test_ar_ds_recost_as_reduce_scatter():
+    """An all-reduce consumed only through slices is re-costed as RS of the
+    slice: (n-1)/n x slice bytes instead of 2(n-1)/n x full."""
+    txt = _entry(
+        "  %ar = f32[1024]{0} all-reduce(%p), "
+        "replica_groups={{0,1,2,3}}, to_apply=%sum\n"
+        "  ROOT %ds = f32[256]{0} dynamic-slice(%ar, %p), "
+        "dynamic_slice_sizes={256}\n")
+    ana = H.analyze_hlo_text(txt, assume_rs_rewrite=True)
+    assert ana.collective_wire_bytes == pytest.approx(3 / 4 * 256 * 4)
+    raw = H.analyze_hlo_text(txt, assume_rs_rewrite=False)
+    assert raw.collective_wire_bytes == pytest.approx(2 * 3 / 4 * _KB4)
+
+
+_WHILE_TXT = """HloModule m
+
+%body (bp: (f32[256])) -> (f32[256]) {
+  %bp = (f32[256]{0}) parameter(0)
+  %gte = f32[256]{0} get-tuple-element(%bp), index=0
+  %ar = f32[256]{0} all-reduce(%gte), replica_groups={{0,1}}, to_apply=%sum
+  %sq = f32[256]{0} multiply(%ar, %ar)
+  ROOT %t = (f32[256]{0}) tuple(%sq)
+}
+
+%cond (cp: (f32[256])) -> pred[] {
+  %cp = (f32[256]{0}) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main (a: f32[256]) -> (f32[256]) {
+  %a = f32[256]{0} parameter(0)
+  %t0 = (f32[256]{0}) tuple(%a)
+  %w = (f32[256]{0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %r = f32[256]{0} get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_while_trip_count_multiplies_collectives_and_flops():
+    """Everything inside a while body — collective wire bytes, flops, HBM
+    traffic — scales by the known trip count, like Kerncraft multiplying
+    per-iteration cost by the loop trip count (paper §2.1)."""
+    ana = H.analyze_hlo_text(_WHILE_TXT)
+    per_iter_wire = 2 * (2 - 1) / 2 * 256 * 4     # AR over group of 2
+    assert ana.collective_wire_bytes == pytest.approx(5 * per_iter_wire)
+    assert ana.vpu_flops == 5 * 256               # the multiply, x5
+    [rec] = ana.schedule
+    assert rec.multiplier == 5 and rec.group_size == 2
+    # HBM traffic of the body multiply: (2 operands + result) x 5 trips
+    assert ana.hbm_bytes >= 5 * 3 * 256 * 4
+
+
+def test_unannotated_while_counts_once():
+    txt = _WHILE_TXT.replace(
+        ', backend_config={"known_trip_count":{"n":"5"}}', "")
+    ana = H.analyze_hlo_text(txt)
+    assert ana.vpu_flops == 256
+    assert ana.schedule[0].multiplier == 1
+
+
+# ----------------------------------------------------------------------
+# The registered "hlo-roofline" model (acceptance: resolves via
+# MODEL_REGISTRY and round-trips through reports.to_json/from_json)
+# ----------------------------------------------------------------------
+
+def test_hlo_roofline_model_registered():
+    from repro.core import MODEL_REGISTRY, resolve_model
+    m = resolve_model("hlo-roofline")
+    assert m is MODEL_REGISTRY["hlo-roofline"]
+    assert m.input_kind == "hlo"
+
+
+def test_hlo_roofline_result_json_round_trip():
+    from repro.core import analyze, load_machine, reports
+
+    res = analyze(_WHILE_TXT, load_machine("V5E"), model="hlo-roofline",
+                  name="while-toy")
+    d = res.to_dict()
+    assert d["model"] == "hlo-roofline"
+    rebuilt = reports.from_json(reports.to_json(res))
+    assert isinstance(rebuilt, H.HLORooflineResult)
+    assert rebuilt.to_dict() == d
+    # machine constants flow from the v5e yaml, not the module fallbacks
+    assert res.peak_flops == pytest.approx(1.97e14)
+    assert res.hbm_bandwidth == pytest.approx(819e9)
+    # the text report renders from the same dict
+    assert "HLO Roofline" in reports.json_report(res)
+
+
+def test_hlo_roofline_uses_machine_dtype():
+    from repro.core import analyze, load_machine
+
+    res32 = analyze(_WHILE_TXT, load_machine("V5E"), model="hlo-roofline",
+                    name="while-toy", dtype="FP32")
+    assert res32.peak_flops == pytest.approx(8.25e12)
+
+
+def test_hlo_roofline_rejects_non_tpu_machine_and_unknown_dtype():
+    """No silent v5e-constant substitution: an x86 cache machine or a dtype
+    the machine lacks must raise, not answer with wrong numbers."""
+    from repro.core import analyze, load_machine
+
+    with pytest.raises(ValueError, match="no TPU fields"):
+        analyze(_WHILE_TXT, load_machine("IVY"), model="hlo-roofline")
+    with pytest.raises(ValueError, match=r"no peak flops for dtype "
+                                         r"'INT8'.*BF16.*FP32"):
+        analyze(_WHILE_TXT, load_machine("V5E"), model="hlo-roofline",
+                dtype="INT8")
+
+
+def test_vpu_only_program_gets_compute_term():
+    """A program with no matmuls (pure elementwise/stencil work) must still
+    report a nonzero compute bound from the VPU peak."""
+    from repro.core import analyze, load_machine
+
+    res = analyze(_WHILE_TXT, load_machine("V5E"), model="hlo-roofline",
+                  name="while-toy")
+    assert res.mxu_flops == 0 and res.vpu_flops > 0
+    assert res.t_compute == pytest.approx(res.vpu_flops
+                                          / res.vpu_peak_flops)
+    assert res.arithmetic_intensity > 0

@@ -91,11 +91,25 @@ class TestPredictorRegistry:
 # ----------------------------------------------------------------------
 class TestModelRegistry:
     def test_registry_names(self):
-        assert {"ecm", "roofline", "roofline-iaca"} <= set(MODEL_REGISTRY)
+        assert {"ecm", "roofline", "roofline-iaca",
+                "hlo-roofline"} <= set(MODEL_REGISTRY)
 
-    def test_unknown_model_message(self):
-        with pytest.raises(ValueError, match=r"unknown performance model"):
+    def test_unknown_model_lists_available(self):
+        """The error names every registered model so typos self-diagnose."""
+        with pytest.raises(ValueError, match=r"unknown performance model "
+                                             r"'not-a-model'.*available.*"
+                                             r"ecm.*hlo-roofline.*roofline"):
             resolve_model("not-a-model")
+
+    def test_unknown_predictor_lists_available(self):
+        with pytest.raises(ValueError, match=r"unknown cache predictor "
+                                             r"'bogus'.*available.*LC.*SIM"):
+            resolve_predictor("bogus")
+
+    def test_result_from_dict_unknown_model_lists_known(self):
+        with pytest.raises(ValueError, match=r"cannot rebuild.*'nope'.*"
+                                             r"ecm.*hlo-roofline"):
+            reports.result_from_dict({"model": "nope"})
 
     def test_ecm_dispatch_matches_module(self, longrange, ivy):
         via_registry = analyze("ecm", longrange, ivy, predictor="LC")
