@@ -12,7 +12,8 @@ import time
 
 from benchmarks import (cli_smoke, kernels_bench, paper_ecm, paper_fig5,
                         paper_fig34, paper_listing4, paper_listing5,
-                        paper_table1, roofline_table, session_cache, tpu_ecm)
+                        paper_table1, roofline_table, session_cache,
+                        sim_bench, tpu_ecm)
 
 SECTIONS = [
     ("Paper Table 1 — 3D-7pt Roofline volumes & times", paper_table1.run),
@@ -23,6 +24,7 @@ SECTIONS = [
      paper_listing5.run),
     ("Paper Figs 3/4 — N-sweep, LC vs cache simulator", paper_fig34.run),
     ("Paper Fig 5 — strong scaling & saturation point", paper_fig5.run),
+    ("Cache simulator — scalar vs vectorized backend", sim_bench.run),
     ("AnalysisSession — memoized sweep micro-benchmark", session_cache.run),
     ("TPU adaptation — v5e ECM/Roofline for the Pallas kernels",
      tpu_ecm.run),
@@ -37,6 +39,8 @@ SMOKE = [
     ("Paper Table 1 — 3D-7pt Roofline volumes & times", paper_table1.run),
     ("Paper §1.2.2 — ECM notation for 3D-7pt", paper_ecm.run),
     ("Paper Fig 5 — strong scaling & saturation point", paper_fig5.run),
+    ("Cache simulator — scalar vs vectorized backend (smoke)",
+     lambda: sim_bench.run(smoke=True)),
     ("AnalysisSession — memoized sweep micro-benchmark",
      lambda: session_cache.run(points=20)),
     ("CLI — kerncraft-style analyze reproduces Listing 4", cli_smoke.run),

@@ -1,0 +1,122 @@
+"""Cache-simulator backend benchmark: scalar reference vs the vectorized
+address-stream engine (``--sim-backend``), pinning two properties in the
+perf trajectory:
+
+1. **Exactness** — the vector backend reproduces the scalar simulator's
+   per-level hit/miss/evict counts *exactly* on the three paper stencils
+   (also pinned by tests/test_cachesim_vector.py).
+2. **Speed** — on production-scale 3D stencil streams the vector backend
+   is at least 25× faster than the scalar reference (the ROADMAP-class
+   bf16 stream on the TPU machine clears that bar by a wide margin; the
+   paper machine's double-precision stream is reported alongside).
+
+    PYTHONPATH=src python -m benchmarks.sim_bench [--smoke]
+"""
+import dataclasses
+import pathlib
+import time
+
+from repro.core import cachesim, load_machine, parse_kernel
+from repro.core.kernel_ir import FlopCount, make_stencil
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+SPEEDUP_TARGET = 25.0      # on the large-stream rows below
+
+
+def _stencil_3d7pt(n: int, m: int, element_bytes: int):
+    """The paper's 3D 7-point stencil at an arbitrary element size."""
+    return make_stencil(
+        f"3d7pt_{element_bytes}B", {"a": ("M", "N", "N"), "b": ("M", "N", "N")},
+        [("k", 1, "M-1"), ("j", 1, "N-1"), ("i", 1, "N-1")],
+        reads=[("a", "k", "j", "i"), ("a", "k", "j", "i-1"),
+               ("a", "k", "j", "i+1"), ("a", "k", "j-1", "i"),
+               ("a", "k", "j+1", "i"), ("a", "k-1", "j", "i"),
+               ("a", "k+1", "j", "i")],
+        writes=[("b", "k", "j", "i")], flops=FlopCount(add=6, mul=7),
+        constants={"M": m, "N": n}, element_bytes=element_bytes)
+
+
+def _parity(a: cachesim.SimResult, b: cachesim.SimResult) -> bool:
+    return all(dataclasses.asdict(a.per_level[lvl])
+               == dataclasses.asdict(b.per_level[lvl])
+               for lvl in a.per_level)
+
+
+def _time(kernel, machine, wr, mr, backend, repeats=1) -> tuple[float, object]:
+    best, res = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = cachesim.simulate(kernel, machine, warmup_rows=wr,
+                                measure_rows=mr, backend=backend)
+        best = min(best, time.perf_counter() - t0)
+    return best, res
+
+
+def run(smoke: bool = False) -> str:
+    lines = []
+
+    # ---- exactness on the paper stencils --------------------------------
+    ivy = load_machine("IVY")
+    parity_cases = [
+        ("stencil_2d5pt.c", {"M": 120, "N": 200}, 3, 2),
+        ("stencil_3d7pt.c", {"M": 30, "N": 50}, 3, 2),
+        ("stencil_3d_long_range.c", {"M": 40, "N": 120}, 3, 2),
+    ]
+    lines.append("exactness (per-level hit/miss/evict counts, scalar vs "
+                 "vector):")
+    for fname, consts, wr, mr in parity_cases:
+        k = parse_kernel((STENCILS / fname).read_text(), constants=consts)
+        _, a = _time(k, ivy, wr, mr, "scalar")
+        _, b = _time(k, ivy, wr, mr, "vector")
+        ok = _parity(a, b)
+        assert ok, f"vector backend diverges from scalar on {fname} {consts}"
+        lines.append(f"  {fname:<28} {str(consts):<24} identical")
+
+    # ---- speed on large streams -----------------------------------------
+    # (machine, element bytes, N, warmup rows, measure rows, smoke variant)
+    if smoke:
+        speed_cases = [
+            ("IVY", "double", 8, 510, 4, 12, None),
+            ("V5E", "bf16", 2, 2046, 4, 28, None),
+        ]
+    else:
+        speed_cases = [
+            ("IVY", "double", 8, 1022, 16, 112, None),
+            ("IVY", "float", 4, 2046, 16, 48, None),
+            ("V5E", "bf16", 2, 4094, 8, 56, SPEEDUP_TARGET),
+        ]
+    lines.append("")
+    lines.append("speedup on 1024³-class 3D 7-point streams (vector "
+                 "best-of-3 vs scalar):")
+    lines.append("  machine | dtype  |    N | rows |  scalar |  vector | "
+                 "speedup")
+    for mach, dtype, eb, n, wr, mr, target in speed_cases:
+        machine = load_machine(mach)
+        k = _stencil_3d7pt(n, 1024, eb)
+        t_v, res_v = _time(k, machine, wr, mr, "vector", repeats=3)
+        t_s, res_s = _time(k, machine, wr, mr, "scalar")
+        assert _parity(res_s, res_v), \
+            f"vector backend diverges from scalar on {mach}/{dtype}/N={n}"
+        speed = t_s / t_v
+        mark = ""
+        if target is not None:
+            assert speed >= target, \
+                (f"vector backend speedup {speed:.1f}x below the "
+                 f"{target:.0f}x target on {mach}/{dtype}/N={n}")
+            mark = f"  (>= {target:.0f}x required)"
+        lines.append(f"  {mach:<7} | {dtype:<6} | {n:>4} | {wr + mr:>4} | "
+                     f"{t_s * 1e3:>6.0f}ms | {t_v * 1e3:>6.1f}ms | "
+                     f"{speed:>6.1f}x{mark}")
+    if smoke:
+        lines.append("  (smoke sizes; run without --smoke for the pinned "
+                     f">={SPEEDUP_TARGET:.0f}x large-stream check)")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    print(run(smoke=ap.parse_args().smoke))

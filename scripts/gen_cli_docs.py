@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Generate docs/cli.md from the live argparse tree of ``python -m repro``.
+
+The document is derived, never hand-edited: ``--write`` regenerates it,
+``--check`` (used by scripts/verify.sh and CI) fails when the committed
+file no longer matches the parser — so the CLI reference cannot go stale.
+
+    PYTHONPATH=src python scripts/gen_cli_docs.py --write
+    PYTHONPATH=src python scripts/gen_cli_docs.py --check
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC = ROOT / "docs" / "cli.md"
+
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.cli import build_parser  # noqa: E402
+
+HEADER = """\
+# `python -m repro` — command-line reference
+
+<!-- GENERATED FILE - do not edit.
+     Regenerate with: PYTHONPATH=src python scripts/gen_cli_docs.py --write
+     scripts/verify.sh fails when this file drifts from the argparse tree. -->
+
+Kerncraft-style command line over the unified ``analyze()`` API
+(`repro.core.api`). Sources are resolved through the frontend registry
+(C files, ``trace:<module>[:attr]`` point functions, HLO dumps), models
+and cache predictors by registry name; results render as text reports or
+as the machine-readable ``to_dict()`` JSON stream (see
+[models.md](models.md) §5 for the provenance fields it carries).
+"""
+
+
+def _option_rows(sp: argparse.ArgumentParser) -> list[tuple[str, str]]:
+    rows = []
+    for act in sp._actions:
+        if isinstance(act, argparse._HelpAction):
+            continue
+        if not act.option_strings:          # positional
+            name = f"`{act.dest}`"
+        else:
+            name = ", ".join(f"`{s}`" for s in act.option_strings)
+            if act.metavar:
+                mv = act.metavar
+                name += f" `{' '.join(mv) if isinstance(mv, tuple) else mv}`"
+            elif act.nargs not in (0, None):
+                name += f" `{act.dest.upper()}`"
+            elif act.nargs is None and not isinstance(
+                    act, (argparse._StoreTrueAction, argparse._StoreFalseAction)):
+                name += f" `{act.dest.upper()}`"
+        desc = (act.help or "").strip()
+        if act.choices:
+            desc += f" (choices: {', '.join(str(c) for c in act.choices)})"
+        if act.default not in (None, False, [], argparse.SUPPRESS) \
+                and act.option_strings:
+            desc += f" [default: {act.default}]"
+        rows.append((name, desc))
+    return rows
+
+
+def _render_table(rows: list[tuple[str, str]]) -> list[str]:
+    out = ["| argument | description |", "|---|---|"]
+    escaped_pipe = "\\|"
+    for name, desc in rows:
+        out.append(f"| {name} | {desc.replace('|', escaped_pipe)} |")
+    return out
+
+
+def render() -> str:
+    ap = build_parser()
+    lines = [HEADER]
+    lines.append(f"```\n{ap.format_usage().strip()}\n```\n")
+    sub_action = next(a for a in ap._actions
+                      if isinstance(a, argparse._SubParsersAction))
+    for name, sp in sub_action.choices.items():
+        lines.append(f"## `repro {name}`\n")
+        help_text = next((ca.help for ca in sub_action._choices_actions
+                          if ca.dest == name), "")
+        if help_text:
+            lines.append(f"{help_text[0].upper()}{help_text[1:]}.\n")
+        usage = sp.format_usage().replace("usage: ", "").strip()
+        lines.append(f"```\n{usage}\n```\n")
+        lines.extend(_render_table(_option_rows(sp)))
+        lines.append("")
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--write", action="store_true",
+                      help="regenerate docs/cli.md")
+    mode.add_argument("--check", action="store_true",
+                      help="exit 1 if docs/cli.md drifted from the parser")
+    args = ap.parse_args()
+    text = render()
+    if args.write:
+        DOC.parent.mkdir(parents=True, exist_ok=True)
+        DOC.write_text(text)
+        print(f"wrote {DOC.relative_to(ROOT)} ({len(text.splitlines())} lines)")
+        return 0
+    current = DOC.read_text() if DOC.exists() else ""
+    if current != text:
+        print("docs/cli.md is stale: regenerate with "
+              "`PYTHONPATH=src python scripts/gen_cli_docs.py --write`",
+              file=sys.stderr)
+        return 1
+    print("docs/cli.md is up to date with the argparse tree")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

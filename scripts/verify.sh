@@ -9,6 +9,10 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== docs: CLI reference drift check =="
+python scripts/gen_cli_docs.py --check
+
+echo
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 

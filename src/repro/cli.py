@@ -10,9 +10,14 @@
 
 Mirrors the paper's UX (``kerncraft -m machine.yml -p ECM kernel.c -D N
 1000``): ``-D`` binds symbolic sizes, ``-p`` picks registered performance
-models (repeatable), ``--cache-predictor`` the LC/SIM switch, and
-``--json`` emits the machine-readable ``to_dict()`` stream instead of the
-text reports — both routed through :mod:`repro.core.reports`.
+models (repeatable), ``--cache-predictor`` the LC/SIM switch (with
+``--sim-backend`` selecting the scalar reference or the vectorized NumPy
+simulator), and ``--json`` emits the machine-readable ``to_dict()`` stream
+instead of the text reports — both routed through
+:mod:`repro.core.reports`.
+
+``docs/cli.md`` is generated from this argparse tree by
+``scripts/gen_cli_docs.py`` (drift-checked in ``scripts/verify.sh``).
 """
 from __future__ import annotations
 
@@ -40,6 +45,18 @@ def _add_common(sp: argparse.ArgumentParser) -> None:
     sp.add_argument("--cache-predictor", default="LC", choices=["LC", "SIM"],
                     help="traffic predictor: layer conditions or cache "
                          "simulator (default LC)")
+    sp.add_argument("--sim-backend", default="auto",
+                    choices=["auto", "scalar", "vector"],
+                    help="cache-simulator engine (SIM only): 'vector' runs "
+                         "the NumPy address-stream backend, 'scalar' the "
+                         "per-access reference; 'auto' picks vector "
+                         "whenever the machine supports it (default)")
+    sp.add_argument("--sim-warmup-rows", type=int, default=2, metavar="ROWS",
+                    help="inner rows simulated before the statistics reset "
+                         "(SIM only, default 2)")
+    sp.add_argument("--sim-measure-rows", type=int, default=1, metavar="ROWS",
+                    help="inner rows measured after warm-up (SIM only, "
+                         "default 1)")
     sp.add_argument("--cores", type=int, default=1)
     sp.add_argument("--json", action="store_true",
                     help="emit machine-readable results (reports.to_json)")
@@ -49,6 +66,16 @@ def _constants(args) -> dict | None:
     if not args.define:
         return None
     return {name: int(value) for name, value in args.define}
+
+
+def _sim_kwargs(args) -> dict | None:
+    """Simulation options for the SIM predictor; None when LC is active so
+    session cache keys stay predictor-minimal."""
+    if args.cache_predictor.upper() != "SIM":
+        return None
+    return {"backend": args.sim_backend,
+            "warmup_rows": args.sim_warmup_rows,
+            "measure_rows": args.sim_measure_rows}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -102,7 +129,7 @@ def cmd_analyze(args) -> int:
     results = []
     for model in _models(args):
         res = sess.analyze(kernel, model, predictor=args.cache_predictor,
-                           cores=args.cores)
+                           cores=args.cores, sim_kwargs=_sim_kwargs(args))
         results.append((model, res))
     if args.json:
         print(json.dumps([r.to_dict() for _, r in results], indent=2,
@@ -110,8 +137,11 @@ def cmd_analyze(args) -> int:
         return 0
     kname = getattr(kernel, "name", args.kernel)
     defines = " ".join(f"-D {n} {v}" for n, v in args.define)
+    backend = (f" --sim-backend {args.sim_backend}"
+               if args.cache_predictor.upper() == "SIM" else "")
     print(f"{kname}  -m {args.machine} "
-          f"--cache-predictor {args.cache_predictor} {defines}".rstrip())
+          f"--cache-predictor {args.cache_predictor}{backend} "
+          f"{defines}".rstrip())
     for model, res in results:
         print()
         print(reports.text_report(res, cores=args.cores))
@@ -124,7 +154,8 @@ def cmd_sweep(args) -> int:
     values = list(range(start, stop + 1, step))     # STOP inclusive
     models = _models(args)
     out = api.sweep(kernel, machine, args.param, values, models=models,
-                    predictor=args.cache_predictor, cores=args.cores)
+                    predictor=args.cache_predictor, cores=args.cores,
+                    sim_kwargs=_sim_kwargs(args))
     if args.json:
         print(json.dumps(
             {m: [r.to_dict() for r in rs] for m, rs in out.items()},

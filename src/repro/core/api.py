@@ -98,9 +98,12 @@ def analyze(source: Any, machine: Machine | str, model: str = "ecm",
     ``source`` is resolved through the frontend registry (``frontend=``
     forces one; otherwise it is detected).  ``name``/``constants`` go to the
     frontend (``constants`` is the CLI's ``-D``); ``predictor``, ``cores``,
-    ``sim_kwargs`` and remaining ``opts`` go to the model.  Pass
-    ``session=`` to use your own memoizing session instead of the pooled
-    per-machine one.
+    ``sim_kwargs`` and remaining ``opts`` go to the model.  For the SIM
+    predictor, ``sim_kwargs`` carries the simulator options — including
+    ``backend`` ('auto'/'scalar'/'vector', the CLI's ``--sim-backend``) —
+    which the session normalizes into its cache keys and the result
+    records in ``predictor_params``.  Pass ``session=`` to use your own
+    memoizing session instead of the pooled per-machine one.
     """
     mach = resolve_machine(machine)
     kernel = _load_kernel_cached(source, frontend, name, constants,

@@ -29,6 +29,11 @@ class ECMResult:
     overlapped: list[tuple[str, float]]      # TPU overlap-mode contributions
     flops_per_unit: float
     clock_hz: float
+    # provenance: which cache predictor produced the data terms, and (for
+    # SIM) the resolved simulation options — so cached, fresh, and
+    # JSON-round-tripped reports are distinguishable
+    predictor: str = "LC"
+    predictor_params: dict = dataclasses.field(default_factory=dict)
 
     @property
     def t_data(self) -> float:
@@ -51,10 +56,17 @@ class ECMResult:
             return 1
         return max(1, math.ceil(self.t_ecm / self.t_mem))
 
+    @property
+    def predictor_tag(self) -> str:
+        """Compact provenance tag, e.g. ``LC`` or ``SIM:vector``."""
+        backend = self.predictor_params.get("backend")
+        return self.predictor + (f":{backend}" if backend else "")
+
     def notation(self) -> str:
         segs = " | ".join(f"{c:.1f}" for _, c in self.contributions)
         return ("{ " + f"{self.t_ol:.1f} || {self.t_nol:.1f}"
-                + (f" | {segs}" if segs else "") + " } cy/CL")
+                + (f" | {segs}" if segs else "") + " } cy/CL"
+                + f" [{self.predictor_tag}]")
 
     def notation_cumulative(self) -> str:
         acc = self.t_nol
@@ -89,6 +101,8 @@ class ECMResult:
             "overlapped": [[n, c] for n, c in self.overlapped],
             "flops_per_unit": self.flops_per_unit,
             "clock_hz": self.clock_hz,
+            "predictor": self.predictor,
+            "predictor_params": dict(self.predictor_params),
             # derived, for consumers that only read the dict:
             "t_data": self.t_data,
             "t_ecm": self.t_ecm,
@@ -104,7 +118,9 @@ class ECMResult:
                                   for n, c in d["contributions"]],
                    overlapped=[(str(n), float(c)) for n, c in d["overlapped"]],
                    flops_per_unit=float(d["flops_per_unit"]),
-                   clock_hz=float(d["clock_hz"]))
+                   clock_hz=float(d["clock_hz"]),
+                   predictor=str(d.get("predictor", "LC")),
+                   predictor_params=dict(d.get("predictor_params", {})))
 
 
 def _data_terms(kernel: LoopKernel, machine: Machine, volumes_bpi: dict[str, float],
@@ -146,4 +162,6 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
     serial, overl = _data_terms(kernel, machine, volumes.bytes_per_it, unit)
     return ECMResult(unit_iterations=unit, t_ol=ic.t_ol, t_nol=ic.t_nol,
                      contributions=serial, overlapped=overl,
-                     flops_per_unit=ic.flops_per_unit, clock_hz=machine.clock_hz)
+                     flops_per_unit=ic.flops_per_unit, clock_hz=machine.clock_hz,
+                     predictor=volumes.predictor,
+                     predictor_params=dict(volumes.params))

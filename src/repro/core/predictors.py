@@ -18,7 +18,7 @@ import abc
 import dataclasses
 
 from . import layer_conditions
-from .cachesim import simulate
+from .cachesim import normalize_sim_kwargs, simulate
 from .kernel_ir import LoopKernel
 from .machine import Machine
 
@@ -32,17 +32,22 @@ class VolumePrediction:
     Roofline.  ``detail`` keeps the predictor-specific evidence (the
     per-level :class:`~repro.core.layer_conditions.LCState` map for LC, the
     :class:`~repro.core.cachesim.SimResult` for SIM) for reports.
+    ``params`` records the predictor options actually used — for SIM the
+    resolved backend and warm-up/measure windows — so downstream results
+    can carry full provenance (see ``ECMResult.predictor_params``).
     """
     predictor: str
     bytes_per_it: dict[str, float]
     detail: object = None
+    params: dict = dataclasses.field(default_factory=dict)
 
     def volume(self, level: str) -> float:
         return self.bytes_per_it.get(level, 0.0)
 
     def to_dict(self) -> dict:
         return {"predictor": self.predictor,
-                "bytes_per_it": dict(self.bytes_per_it)}
+                "bytes_per_it": dict(self.bytes_per_it),
+                "params": dict(self.params)}
 
 
 class CachePredictor(abc.ABC):
@@ -91,8 +96,11 @@ class LayerConditionPredictor(CachePredictor):
 class CacheSimulationPredictor(CachePredictor):
     """Set-associative simulation (paper §2.4.1) — sees real set indices.
 
-    Extra keyword arguments (``warmup_rows``, ``measure_rows``, ``seed``)
-    are forwarded to :func:`repro.core.cachesim.simulate`.
+    Extra keyword arguments (``warmup_rows``, ``measure_rows``, ``seed``,
+    ``backend``) are forwarded to :func:`repro.core.cachesim.simulate`;
+    ``backend`` is the scalar/vector engine switch (CLI ``--sim-backend``).
+    The returned prediction's ``params`` records the options actually used,
+    with ``backend`` resolved (never ``auto``).
     """
 
     name = "SIM"
@@ -100,12 +108,14 @@ class CacheSimulationPredictor(CachePredictor):
 
     def predict(self, kernel: LoopKernel, machine: Machine, cores: int = 1,
                 **kwargs) -> VolumePrediction:
-        res = simulate(kernel, machine, **kwargs)
+        params = normalize_sim_kwargs(kwargs, machine)
+        res = simulate(kernel, machine, **params)
         return VolumePrediction(
             predictor=self.name,
             bytes_per_it={n: res.total_bytes_per_it(n)
                           for n in machine.level_names},
-            detail=res)
+            detail=res,
+            params=params)
 
 
 def resolve_predictor(name: str) -> CachePredictor:

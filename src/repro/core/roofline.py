@@ -43,6 +43,10 @@ class RooflineResult:
     flops_per_unit: float
     clock_hz: float
     variant: str = "IACA"         # which in-core bound produced t_core
+    # provenance (mirrors ECMResult): predictor that produced β_k + its
+    # resolved options, so serialized reports are self-describing
+    predictor: str = "LC"
+    predictor_params: dict = dataclasses.field(default_factory=dict)
 
     @property
     def bottleneck(self) -> str:
@@ -74,6 +78,8 @@ class RooflineResult:
             "levels": [dataclasses.asdict(l) for l in self.levels],
             "flops_per_unit": self.flops_per_unit,
             "clock_hz": self.clock_hz,
+            "predictor": self.predictor,
+            "predictor_params": dict(self.predictor_params),
             # derived, for consumers that only read the dict:
             "bottleneck": self.bottleneck,
             "performance": self.performance,
@@ -88,7 +94,9 @@ class RooflineResult:
                    flops_per_unit=float(d["flops_per_unit"]),
                    clock_hz=float(d["clock_hz"]),
                    variant=("IACA" if d.get("model") == "roofline-iaca"
-                            else "classic"))
+                            else "classic"),
+                   predictor=str(d.get("predictor", "LC")),
+                   predictor_params=dict(d.get("predictor_params", {})))
 
 
 def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
@@ -156,4 +164,6 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
                           core_performance=core_perf, levels=levels,
                           flops_per_unit=flops_unit, clock_hz=machine.clock_hz,
                           variant=("IACA" if variant.upper() == "IACA"
-                                   else "classic"))
+                                   else "classic"),
+                          predictor=volumes.predictor,
+                          predictor_params=dict(volumes.params))

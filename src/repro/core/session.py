@@ -10,6 +10,12 @@ opts)``, so an :class:`AnalysisSession` caches all three tiers:
   2. predictor volumes       (keyed by kernel × predictor × cores × opts)
   3. full model results      (keyed by model × kernel × predictor × opts)
 
+For the SIM predictor the option key is *normalized* — defaults filled
+in and ``backend='auto'`` resolved against the machine — so equivalent
+spellings share entries while different simulator backends/windows key
+separately; predictors that never see sim options (LC) drop them from
+the key entirely.
+
 and exposes a batch API::
 
     sess = AnalysisSession(machine)
@@ -29,11 +35,12 @@ from __future__ import annotations
 import dataclasses
 
 from . import incore
+from .cachesim import normalize_sim_kwargs
 from .incore import InCoreResult
 from .kernel_ir import LoopKernel
 from .machine import Machine
 from .model_api import MODEL_REGISTRY, Result, resolve_model
-from .predictors import VolumePrediction, predict_volumes
+from .predictors import VolumePrediction, predict_volumes, resolve_predictor
 
 
 # Stringifying sympy expressions dominates key construction, and
@@ -166,6 +173,18 @@ class AnalysisSession:
                 self.cores if cores is None else cores,
                 self.sim_kwargs if sim_kwargs is None else sim_kwargs)
 
+    def _sim_key(self, predictor: str, sim_kwargs: dict) -> tuple:
+        """Cache-key fragment for the simulation options.
+
+        Normalized so equivalent spellings share entries: predictors that
+        never see sim_kwargs (LC) key as ``()``, and for SIM the defaults
+        are filled in and ``backend='auto'`` is resolved against the
+        machine — the key always names the backend actually simulating.
+        """
+        if not resolve_predictor(predictor).uses_sim_kwargs:
+            return ()
+        return _freeze(normalize_sim_kwargs(sim_kwargs, self.machine))
+
     # ------------------------------------------------------------------
     def incore(self, kernel: LoopKernel) -> InCoreResult:
         """Memoized in-core port-model analysis (paper §2.5)."""
@@ -186,7 +205,7 @@ class AnalysisSession:
         predictor, cores, sim_kwargs = self._defaults(predictor, cores,
                                                       sim_kwargs)
         key = (kernel_key(kernel), self.machine.name, predictor.upper(),
-               cores, _freeze(sim_kwargs))
+               cores, self._sim_key(predictor, sim_kwargs))
         hit = self._volumes.get(key)
         if hit is not None:
             self.stats.volume_hits += 1
@@ -236,7 +255,8 @@ class AnalysisSession:
         predictor, cores, sim_kwargs = self._defaults(predictor, cores,
                                                       sim_kwargs)
         key = (m.name, kernel_key(kernel), self.machine.name,
-               predictor.upper(), cores, _freeze(sim_kwargs), _freeze(opts))
+               predictor.upper(), cores, self._sim_key(predictor, sim_kwargs),
+               _freeze(opts))
         hit = self._results.get(key)
         if hit is not None:
             self.stats.result_hits += 1

@@ -4,7 +4,7 @@ The container may not ship ``hypothesis``; rather than skip every property
 test, this shim replays each ``@given`` test over a fixed number of
 pseudo-randomly drawn examples (seeded, so runs are reproducible).  It
 implements only what the tests import: ``given``, ``settings``, and the
-``integers`` / ``sampled_from`` / ``composite`` strategies.
+``integers`` / ``sampled_from`` / ``booleans`` / ``composite`` strategies.
 
 Import pattern (both test modules):
 
@@ -39,6 +39,10 @@ class strategies:
     def sampled_from(seq) -> Strategy:
         items = list(seq)
         return Strategy(lambda rng: rng.choice(items))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: rng.random() < 0.5)
 
     @staticmethod
     def composite(fn):

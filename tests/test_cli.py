@@ -105,11 +105,57 @@ def test_blocking_command(capsys):
     (["analyze", "configs/stencils/stencil_3d7pt.c", "-m", "IVY",
       "-p", "bogus", "-D", "M", "8", "-D", "N", "8"],
      "unknown performance model"),
+    (["analyze", "configs/stencils/stencil_2d5pt.c", "-m", "IVY",
+      "-D", "M", "20", "-D", "N", "40", "--cache-predictor", "SIM",
+      "--sim-measure-rows", "0"],
+     "measure_rows must be >= 1"),
 ])
 def test_cli_errors_exit_2(argv, msg, capsys):
     rc, _, err = run_cli(argv, capsys)
     assert rc == 2
     assert msg in err
+
+
+def test_sim_backend_flag_and_json_provenance(capsys):
+    """--cache-predictor SIM --sim-backend selects the engine and the
+    JSON output carries the predictor name + resolved sim options, so
+    cached and fresh reports are distinguishable (ISSUE 3 satellite)."""
+    base = ["analyze", "configs/stencils/stencil_3d7pt.c", "-m", "IVY",
+            "-p", "ecm", "-D", "M", "20", "-D", "N", "40",
+            "--cache-predictor", "SIM", "--sim-warmup-rows", "3",
+            "--sim-measure-rows", "2", "--json"]
+    rc, out_auto, _ = run_cli(base, capsys)
+    assert rc == 0
+    d = json.loads(out_auto)[0]
+    assert d["predictor"] == "SIM"
+    assert d["predictor_params"]["backend"] == "vector"   # auto resolves
+    assert d["predictor_params"]["warmup_rows"] == 3
+    assert "[SIM:vector]" in d["notation"]
+    assert reports.result_from_dict(d).to_dict() == d
+
+    rc, out_scalar, _ = run_cli(base + ["--sim-backend", "scalar"], capsys)
+    assert rc == 0
+    d2 = json.loads(out_scalar)[0]
+    assert d2["predictor_params"]["backend"] == "scalar"
+    # the two engines agree on the model numbers, differ only in provenance
+    assert d2["t_ecm"] == d["t_ecm"] and d2["contributions"] == d["contributions"]
+
+
+def test_lc_json_carries_predictor(capsys):
+    rc, out, _ = run_cli(LONGRANGE + ["--json"], capsys)
+    assert rc == 0
+    d = json.loads(out)[0]
+    assert d["predictor"] == "LC" and d["predictor_params"] == {}
+    assert d["notation"].endswith("[LC]")
+
+
+def test_sim_backend_header_in_text_report(capsys):
+    rc, out, _ = run_cli(
+        ["analyze", "configs/stencils/stencil_2d5pt.c", "-m", "IVY",
+         "-p", "ecm", "-D", "M", "20", "-D", "N", "40",
+         "--cache-predictor", "SIM"], capsys)
+    assert rc == 0
+    assert "--cache-predictor SIM --sim-backend auto" in out
 
 
 def test_blocking_rejects_hlo_source(tmp_path, capsys):
