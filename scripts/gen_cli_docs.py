@@ -57,8 +57,11 @@ def _option_rows(sp: argparse.ArgumentParser) -> list[tuple[str, str]]:
         desc = (act.help or "").strip()
         if act.choices:
             desc += f" (choices: {', '.join(str(c) for c in act.choices)})"
-        if act.default not in (None, False, [], argparse.SUPPRESS) \
-                and act.option_strings:
+        # identity checks: `0 in (None, False, ...)` is True (0 == False),
+        # which would hide the default of any zero-valued option
+        if (act.default is not None and act.default is not False
+                and act.default != [] and act.default is not argparse.SUPPRESS
+                and act.option_strings):
             desc += f" [default: {act.default}]"
         rows.append((name, desc))
     return rows

@@ -662,8 +662,8 @@ def _compile_kernel(kernel: LoopKernel):
 
 
 def simulate(kernel: LoopKernel, machine: Machine, warmup_rows: int = 2,
-             measure_rows: int = 1, seed: int = 0, backend: str = "auto",
-             max_level_bytes: float | None = None) -> SimResult:
+             measure_rows: int = 1, seed: int = 0,
+             backend: str = "auto") -> SimResult:
     """Simulate ``warmup_rows`` inner rows, reset stats, measure
     ``measure_rows`` rows (a row = one full inner-loop sweep). The warm-up
     start is placed mid-array so the steady-state neighborhood exists, and
@@ -783,12 +783,17 @@ def _run_vector(machine, accesses, outer_vals, advance, i0, i1, istep, cl,
     n_acc = len(accesses)
     n_load_sites = sum(1 for a in accesses if not a.is_write)
     first = levels[0]
+    w_step = coeff_inner * istep            # bytes per iteration *index*
     # analytic run-chains lean on the LRU inclusion property (run tails
-    # are up to n_acc events apart); FIFO levels take the per-event path
+    # are up to n_acc events apart); FIFO levels take the per-event path.
+    # They also assume each site's touched lines form one contiguous
+    # range (cnt = last - first + 1), which only holds while a single
+    # iteration cannot skip a whole cache line: any site striding past
+    # the line size takes the per-event path too.
     compressed = (n_acc > 0 and isinstance(first, _VectorCache)
                   and first.lru and n_acc <= first.ways and istep > 0
-                  and bool((coeff_inner >= 0).all()))
-    w_step = coeff_inner * istep            # bytes per iteration *index*
+                  and bool((coeff_inner >= 0).all())
+                  and bool((w_step <= cl).all()))
     clock = 1      # global event position across blocks; ≥ 1 so real
     #                stamps always beat the empty-way sentinel 0
 

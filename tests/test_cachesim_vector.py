@@ -102,6 +102,45 @@ class TestScalarVectorParity:
                          constants={"M": 20, "N": 200})
         _assert_identical(k, v5e, warmup_rows=2, measure_rows=2)
 
+    def test_inner_stride_exceeds_cacheline_identical(self, ivy):
+        """Regression: column-order traversal of a row-major array gives
+        an inner byte stride of N*8 > cacheline, so consecutive touches
+        of one site skip whole lines — the compressed path's contiguous
+        line-range algebra (cnt = last - first + 1) does not apply and
+        must yield to the per-event fallback.  Diverged wildly (negative
+        hit counts, phantom L2/L3 traffic) before the stride bound was
+        added to the `compressed` predicate."""
+        k = make_stencil(
+            "colcopy", {"a": ("N", "N"), "b": ("N", "N")},
+            [("j", 0, "N"), ("i", 0, "N")],
+            reads=[("a", "i", "j")], writes=[("b", "i", "j")],
+            flops=FlopCount(add=1), constants={"N": 200})
+        _assert_identical(k, ivy, warmup_rows=2, measure_rows=2)
+
+    @given(st.integers(9, 40))
+    @settings(max_examples=8, deadline=None)
+    def test_random_column_order_sizes_identical(self, n):
+        """Property: parity on column-order 2D traversals across sizes,
+        including strides far beyond the cache line."""
+        ivy = load_machine("IVY")
+        k = make_stencil(
+            "colsum", {"a": ("N", "N"), "b": ("N", "N")},
+            [("j", 0, "N"), ("i", 0, "N")],
+            reads=[("a", "i", "j"), ("a", "i", "j+1")],
+            writes=[("b", "i", "j")],
+            flops=FlopCount(add=2), constants={"N": n})
+        _assert_identical(k, ivy, warmup_rows=2, measure_rows=2)
+
+    def test_inner_stride_equals_cacheline_identical(self, ivy):
+        """Stride == cacheline touches every line exactly once — the
+        boundary case that legitimately stays on the compressed path."""
+        k = make_stencil(
+            "colcopy8", {"a": ("N", "N"), "b": ("N", "N")},
+            [("j", 0, "N"), ("i", 0, "N")],
+            reads=[("a", "i", "j")], writes=[("b", "i", "j")],
+            flops=FlopCount(add=1), constants={"N": 8})
+        _assert_identical(k, ivy, warmup_rows=2, measure_rows=2)
+
     @given(st.integers(1, 3), st.integers(40, 300))
     @settings(max_examples=8, deadline=None)
     def test_random_star_stencils_identical(self, radius, n):
