@@ -3,47 +3,63 @@ plus the TPU-adaptation, dry-run roofline, and AnalysisSession sections.
 All model evaluations route through the MODEL_REGISTRY / AnalysisSession
 layer (DESIGN.md §4-5).
 
-    PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke] [--enforce]
 
 ``--smoke`` runs the fast registry-driven subset (used by
-scripts/verify.sh; finishes well under a minute)."""
+scripts/verify.sh and the CI smoke job; finishes well under a minute).
+``--enforce`` turns missed speedup targets (the cache-simulator and
+compiled-sweep benchmarks) into hard failures instead of reports."""
 import argparse
 import time
 
 from benchmarks import (cli_smoke, kernels_bench, paper_ecm, paper_fig5,
                         paper_fig34, paper_listing4, paper_listing5,
                         paper_table1, roofline_table, session_cache,
-                        sim_bench, tpu_ecm)
+                        sim_bench, sweep_bench, tpu_ecm)
 
+# every section takes the parsed args so speed gates can honor --enforce
 SECTIONS = [
-    ("Paper Table 1 — 3D-7pt Roofline volumes & times", paper_table1.run),
-    ("Paper §1.2.2 — ECM notation for 3D-7pt", paper_ecm.run),
+    ("Paper Table 1 — 3D-7pt Roofline volumes & times",
+     lambda a: paper_table1.run()),
+    ("Paper §1.2.2 — ECM notation for 3D-7pt", lambda a: paper_ecm.run()),
     ("Paper Listing 4 — long-range stencil ECM + RooflineIACA",
-     paper_listing4.run),
+     lambda a: paper_listing4.run()),
     ("Paper Listing 5 — layer-condition transition points",
-     paper_listing5.run),
-    ("Paper Figs 3/4 — N-sweep, LC vs cache simulator", paper_fig34.run),
-    ("Paper Fig 5 — strong scaling & saturation point", paper_fig5.run),
-    ("Cache simulator — scalar vs vectorized backend", sim_bench.run),
-    ("AnalysisSession — memoized sweep micro-benchmark", session_cache.run),
+     lambda a: paper_listing5.run()),
+    ("Paper Figs 3/4 — N-sweep, LC vs cache simulator",
+     lambda a: paper_fig34.run(fast=not a.full)),
+    ("Paper Fig 5 — strong scaling & saturation point",
+     lambda a: paper_fig5.run()),
+    ("Cache simulator — scalar vs vectorized backend",
+     lambda a: sim_bench.run(enforce=a.enforce)),
+    ("Compiled sweep plans — batched LC/ECM closed forms",
+     lambda a: sweep_bench.run(enforce=a.enforce)),
+    ("AnalysisSession — memoized sweep micro-benchmark",
+     lambda a: session_cache.run()),
     ("TPU adaptation — v5e ECM/Roofline for the Pallas kernels",
-     tpu_ecm.run),
+     lambda a: tpu_ecm.run()),
     ("Pallas kernels — interpret timing + v5e predictions",
-     kernels_bench.run),
-    ("§Roofline — dry-run artifacts table", roofline_table.run),
-    ("CLI — kerncraft-style analyze reproduces Listing 4", cli_smoke.run),
+     lambda a: kernels_bench.run()),
+    ("§Roofline — dry-run artifacts table", lambda a: roofline_table.run()),
+    ("CLI — kerncraft-style analyze reproduces Listing 4",
+     lambda a: cli_smoke.run()),
 ]
 
 # fast subset exercising the registry/session layer end to end (<60 s)
 SMOKE = [
-    ("Paper Table 1 — 3D-7pt Roofline volumes & times", paper_table1.run),
-    ("Paper §1.2.2 — ECM notation for 3D-7pt", paper_ecm.run),
-    ("Paper Fig 5 — strong scaling & saturation point", paper_fig5.run),
+    ("Paper Table 1 — 3D-7pt Roofline volumes & times",
+     lambda a: paper_table1.run()),
+    ("Paper §1.2.2 — ECM notation for 3D-7pt", lambda a: paper_ecm.run()),
+    ("Paper Fig 5 — strong scaling & saturation point",
+     lambda a: paper_fig5.run()),
     ("Cache simulator — scalar vs vectorized backend (smoke)",
-     lambda: sim_bench.run(smoke=True)),
+     lambda a: sim_bench.run(smoke=True, enforce=a.enforce)),
+    ("Compiled sweep plans — batched LC/ECM closed forms (smoke)",
+     lambda a: sweep_bench.run(smoke=True, enforce=a.enforce)),
     ("AnalysisSession — memoized sweep micro-benchmark",
-     lambda: session_cache.run(points=20)),
-    ("CLI — kerncraft-style analyze reproduces Listing 4", cli_smoke.run),
+     lambda a: session_cache.run(points=20)),
+    ("CLI — kerncraft-style analyze reproduces Listing 4",
+     lambda a: cli_smoke.run()),
 ]
 
 
@@ -53,6 +69,9 @@ def main() -> None:
                     help="run the slow cache-simulator sweep points too")
     ap.add_argument("--smoke", action="store_true",
                     help="fast registry/session subset (CI smoke)")
+    ap.add_argument("--enforce", action="store_true",
+                    help="fail when a pinned speedup target is missed "
+                         "instead of just reporting it")
     args = ap.parse_args()
     t00 = time.perf_counter()
     for title, fn in (SMOKE if args.smoke else SECTIONS):
@@ -60,10 +79,7 @@ def main() -> None:
         print(title)
         print("=" * 72)
         t0 = time.perf_counter()
-        if fn is paper_fig34.run:
-            print(fn(fast=not args.full))
-        else:
-            print(fn())
+        print(fn(args))
         print(f"[{time.perf_counter()-t0:.1f}s]\n")
     print(f"total: {time.perf_counter()-t00:.1f}s")
 

@@ -1,0 +1,126 @@
+"""Compiled analytic sweep benchmark (DESIGN.md §8), pinning the two
+properties of the compiled-plan tier in the perf trajectory:
+
+1. **Exactness** — compiled sweeps are bit-for-bit ``to_dict``-identical
+   to the per-point symbolic path on the three paper stencils, at values
+   spanning (and sitting exactly on) their layer-condition transition
+   points.  Always asserted.
+2. **Speed** — a 1000-point *cold* ECM N-sweep through the compiled plan
+   is at least 20× faster than per-point symbolic evaluation
+   (``ecm.model`` per bound point, the pre-plan hot path).  The full run
+   times every symbolic point; ``--smoke`` times a sample and scales.  A
+   missed target is reported and marked, not fatal — wall-clock ratios
+   are load-dependent; pass ``--enforce`` to turn a miss into a failure.
+
+    PYTHONPATH=src python -m benchmarks.sweep_bench [--smoke] [--enforce]
+"""
+import math
+import pathlib
+import time
+
+from repro.core import (AnalysisSession, ecm, layer_conditions, load_machine,
+                        parse_kernel)
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+SPEEDUP_TARGET = 20.0      # cold 1000-point ECM N-sweep, compiled vs symbolic
+
+IDENTITY_CASES = [
+    ("stencil_2d5pt.c", {"M": 200, "N": 400}, ["ecm"]),
+    ("stencil_3d7pt.c", {"M": 300, "N": 700}, ["ecm", "roofline-iaca"]),
+    ("stencil_3d_long_range.c", {"M": 130, "N": 1015}, ["ecm"]),
+]
+
+
+def _transition_values(kernel, machine, lo=8, hi=4000) -> list[int]:
+    """Sweep values at and around every finite LC transition of every cache
+    level, plus a coarse spread — the points where a regime table could
+    get a boundary wrong."""
+    vals = {lo, hi, (lo + hi) // 2}
+    for lv in machine.levels:
+        for tr in layer_conditions.transition_points(kernel, lv.size_bytes,
+                                                     "N"):
+            if not math.isfinite(tr.max_value) or tr.max_value <= 0:
+                continue
+            t = tr.max_value
+            for v in (math.floor(t) - 1, math.floor(t), math.ceil(t),
+                      math.ceil(t) + 1):
+                if lo <= v <= hi:
+                    vals.add(int(v))
+    return sorted(vals)
+
+
+def _check_identity(ivy) -> list[str]:
+    lines = ["exactness (compiled vs per-point symbolic to_dict, values "
+             "across/at LC transitions):"]
+    for fname, consts, models in IDENTITY_CASES:
+        k = parse_kernel((STENCILS / fname).read_text(), constants=consts)
+        values = _transition_values(k, ivy)
+        sym = AnalysisSession(ivy).sweep(k, "N", values, models=models,
+                                         compiled=False)
+        comp = AnalysisSession(ivy).sweep(k, "N", values, models=models,
+                                          compiled=True)
+        for m in sym:
+            for v, a, b in zip(values, sym[m], comp[m]):
+                assert a.to_dict() == b.to_dict(), \
+                    f"compiled {m} diverges from symbolic on {fname} N={v}"
+        lines.append(f"  {fname:<28} {len(values):>3} values x "
+                     f"{len(models)} models   identical")
+    return lines
+
+
+def run(smoke: bool = False, enforce: bool = False) -> str:
+    ivy = load_machine("IVY")
+    lines = _check_identity(ivy)
+
+    # ---- speed: cold 1000-point ECM N-sweep -----------------------------
+    k = parse_kernel((STENCILS / "stencil_3d7pt.c").read_text(),
+                     name="3d-7pt", constants={"M": 300, "N": 700})
+    values = list(range(100, 1100))                  # 1000 points
+    sample = values[::20] if smoke else values       # symbolic timing basis
+
+    t0 = time.perf_counter()
+    for n in sample:
+        ecm.model(k.bind(N=n), ivy, predictor="LC")
+    t_symbolic = (time.perf_counter() - t0) * len(values) / len(sample)
+
+    sess = AnalysisSession(ivy)
+    t0 = time.perf_counter()
+    sess.sweep(k, "N", values, models=["ecm"], compiled=True)
+    t_compiled = time.perf_counter() - t0
+
+    speed = t_symbolic / t_compiled if t_compiled > 0 else float("inf")
+    lines.append("")
+    lines.append(f"cold {len(values)}-point ECM N-sweep (3d-7pt, IVY, LC):")
+    basis = (f" (sampled {len(sample)} points, scaled)" if smoke else "")
+    lines.append(f"  per-point symbolic (ecm.model)  : "
+                 f"{t_symbolic * 1e3:9.0f} ms{basis}")
+    lines.append(f"  compiled plan, cold (one batch) : "
+                 f"{t_compiled * 1e3:9.1f} ms")
+    mark = ""
+    if not smoke or enforce:
+        if speed >= SPEEDUP_TARGET:
+            mark = f"  (>= {SPEEDUP_TARGET:.0f}x target met)"
+        elif enforce:
+            raise AssertionError(
+                f"compiled sweep speedup {speed:.1f}x below the "
+                f"{SPEEDUP_TARGET:.0f}x target")
+        else:
+            mark = (f"  (!! below the {SPEEDUP_TARGET:.0f}x target — "
+                    "timing-dependent; rerun on an idle machine or pass "
+                    "--enforce to fail)")
+    lines.append(f"  speedup                         : {speed:9.0f}x{mark}")
+    lines.append(f"  session stats: {sess.stats}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--enforce", action="store_true",
+                    help="fail (non-zero exit) if the speedup target is "
+                         "missed instead of just reporting it")
+    args = ap.parse_args()
+    print(run(smoke=args.smoke, enforce=args.enforce))

@@ -6,7 +6,11 @@
     python -m repro analyze dump.hlo -m V5E -p hlo-roofline
     python -m repro sweep configs/stencils/stencil_3d7pt.c -m IVY \
         --param N --range 100 1100 100 --json
+    python -m repro sweep configs/stencils/stencil_3d7pt.c -m IVY \
+        --param N --range 100 2000 1 --dense -D M 300
     python -m repro blocking configs/stencils/stencil_3d_long_range.c -m IVY
+    python -m repro blocking configs/stencils/stencil_3d_long_range.c \
+        -m IVY -D M 130 -D N 1015 --grid 64 1024 8
 
 Mirrors the paper's UX (``kerncraft -m machine.yml -p ECM kernel.c -D N
 1000``): ``-D`` binds symbolic sizes, ``-p`` picks registered performance
@@ -23,6 +27,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 from repro.core import LoopKernel, api, blocking, reports
@@ -101,6 +106,12 @@ def build_parser() -> argparse.ArgumentParser:
     sp.add_argument("--range", nargs=3, type=int, required=True,
                     metavar=("START", "STOP", "STEP"),
                     help="sweep values START..STOP inclusive, stepping STEP")
+    sp.add_argument("--dense", action="store_true",
+                    help="require the compiled analytic sweep plan: the "
+                         "grid is batched through vectorized LC/ECM closed "
+                         "forms and the symbolic path runs once per LC "
+                         "regime (results are identical; errors out for "
+                         "predictors without a closed form, e.g. SIM)")
 
     sp = sub.add_parser("blocking",
                         help="per-level LC blocking factors + model table")
@@ -109,6 +120,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="loop symbol to block (default N)")
     sp.add_argument("--safety", type=float, default=0.5,
                     help="usable fraction of each cache level (default 0.5)")
+    sp.add_argument("-p", "--performance-model", default="ecm",
+                    metavar="MODEL",
+                    help="model scored by --grid (default ecm)")
+    sp.add_argument("--grid", nargs=3, type=int, default=None,
+                    metavar=("START", "STOP", "STEP"),
+                    help="dense grid search over --symbol via the compiled "
+                         "plan: score START..STOP inclusive and report the "
+                         "best blocking factor")
+    sp.add_argument("--grid2", nargs=4, default=None,
+                    metavar=("SYMBOL", "START", "STOP", "STEP"),
+                    help="second grid dimension for a 2D blocking search "
+                         "(outer symbol bound per row, inner batched)")
     return ap
 
 
@@ -155,7 +178,8 @@ def cmd_sweep(args) -> int:
     models = _models(args)
     out = api.sweep(kernel, machine, args.param, values, models=models,
                     predictor=args.cache_predictor, cores=args.cores,
-                    sim_kwargs=_sim_kwargs(args))
+                    sim_kwargs=_sim_kwargs(args),
+                    compiled=True if args.dense else "auto")
     if args.json:
         print(json.dumps(
             {m: [r.to_dict() for r in rs] for m, rs in out.items()},
@@ -175,6 +199,37 @@ def cmd_sweep(args) -> int:
     return 0
 
 
+def _cmd_blocking_grid(args, machine, kernel) -> int:
+    start, stop, step = args.grid
+    specs = [(args.symbol, range(start, stop + 1, step))]
+    if args.grid2 is not None:
+        sym2, s2, e2, st2 = args.grid2
+        # outer dimension first: the inner one is batched per row
+        specs = [(sym2, range(int(s2), int(e2) + 1, int(st2)))] + specs
+    gs = blocking.grid_search(kernel, machine, specs,
+                              model=args.performance_model,
+                              predictor=args.cache_predictor,
+                              cores=args.cores)
+    if args.json:
+        print(json.dumps(gs.to_dict(), indent=2, sort_keys=True))
+        return 0
+    pts = 1
+    for g in gs.grids:
+        pts *= len(g)
+    grid_desc = " x ".join(f"{s}[{g[0]}..{g[-1]}]"
+                           for s, g in zip(gs.symbols, gs.grids))
+    print(f"dense blocking grid search for "
+          f"{getattr(kernel, 'name', args.kernel)} "
+          f"({gs.model}, {pts} points over {grid_desc}):")
+    unit = ("GFLOP/s" if gs.metric == "flops" else "cy/unit")
+    scale = 1e-9 if gs.metric == "flops" else 1.0
+    best = " ".join(f"{s} = {v}" for s, v in gs.best.items())
+    print(f"  best: {best}  ->  {gs.best_score * scale:.1f} {unit}")
+    if hasattr(gs.best_result, "notation"):
+        print(f"  {gs.best_result.notation()}")
+    return 0
+
+
 def cmd_blocking(args) -> int:
     machine, kernel = _load(args)
     if not isinstance(kernel, LoopKernel):
@@ -182,19 +237,23 @@ def cmd_blocking(args) -> int:
             "blocking analyzes symbolic loop kernels; "
             f"{args.kernel!r} loaded as {type(kernel).__name__} "
             "(use a c/builder/trace source)")
+    if args.grid2 is not None and args.grid is None:
+        raise ValueError("--grid2 needs --grid for the first dimension")
+    if args.grid is not None:
+        return _cmd_blocking_grid(args, machine, kernel)
     rows = []
     for lv in machine.levels:
         bs = blocking.lc_block_size(kernel, lv.size_bytes,
                                     symbol=args.symbol, safety=args.safety)
         rows.append({"level": lv.name, "size_bytes": lv.size_bytes,
-                     "block": bs})
+                     "block": None if math.isinf(bs) else int(bs)})
     if args.json:
         print(json.dumps({"symbol": args.symbol, "levels": rows}, indent=2))
         return 0
     print(f"LC blocking factors for {getattr(kernel, 'name', args.kernel)} "
           f"(symbol {args.symbol}, safety {args.safety}):")
     for row in rows:
-        blk = "unbounded" if row["block"] >= 1 << 30 else str(row["block"])
+        blk = "unbounded" if row["block"] is None else str(row["block"])
         print(f"  {row['level']:<5} ({row['size_bytes'] / 1024:8.0f} kB): "
               f"{args.symbol} <= {blk}")
     return 0

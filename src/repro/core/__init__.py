@@ -8,10 +8,12 @@
 # object, predictors.py owns the LC/SIM dispatch, model_api.py the
 # PerformanceModel registry, session.py the memoizing AnalysisSession, and
 # api.py the one analyze() entry point tying them together.
-from . import (blocking, c_parser, cachesim, ecm, frontends, incore,
-               kernel_ir, layer_conditions, machine, model_api, predictors,
-               reports, roofline, session)  # noqa: F401
+from . import (blocking, c_parser, cachesim, compiled, ecm, frontends,
+               identity, incore, kernel_ir, layer_conditions, machine,
+               model_api, predictors, reports, roofline, session)  # noqa: F401
 from . import api, hlo_analysis  # noqa: F401
+
+from .compiled import CompiledSweepPlan, CompileError, compile_plan  # noqa: F401
 
 from .api import analyze, get_session, resolve_machine, sweep  # noqa: F401
 from .c_parser import parse_kernel  # noqa: F401

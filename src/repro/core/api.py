@@ -124,10 +124,17 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
           sim_kwargs: dict | None = None,
           session: AnalysisSession | None = None,
           frontend_opts: dict | None = None,
+          compiled: bool | str = "auto",
           **opts) -> dict[str, list[Result]]:
     """Frontend-aware batch API: load once, evaluate ``models`` at every
     ``param`` value through the memoizing session (see
-    :meth:`AnalysisSession.sweep`)."""
+    :meth:`AnalysisSession.sweep`).
+
+    ``compiled`` selects the sweep engine: ``"auto"`` (default) batches
+    eligible sweeps through the compiled analytic plan
+    (:mod:`repro.core.compiled` — results stay bit-for-bit identical),
+    ``True`` requires it (the CLI's ``sweep --dense``), ``False`` forces
+    the per-point symbolic path."""
     mach = resolve_machine(machine)
     kernel = _load_kernel_cached(source, frontend, name, constants,
                                  frontend_opts)
@@ -138,4 +145,4 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
             f"not {mach.name!r}")
     return sess.sweep(kernel, param, values, models=models,
                       predictor=predictor, cores=cores,
-                      sim_kwargs=sim_kwargs, **opts)
+                      sim_kwargs=sim_kwargs, compiled=compiled, **opts)

@@ -13,11 +13,15 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
 import sympy
 
 from . import layer_conditions
+from .compiled import CompileError
 from .kernel_ir import LoopKernel
 from .machine import Machine
+from .model_api import resolve_model
+from .predictors import resolve_predictor
 from .session import AnalysisSession
 
 LANE = 128     # TPU lane count: last dim of a VMEM tile
@@ -25,18 +29,26 @@ SUBLANE = 8    # penultimate dim granule (fp32)
 
 
 def lc_block_size(kernel: LoopKernel, cache_bytes: float, symbol: str = "N",
-                  safety: float = 0.5) -> int:
+                  safety: float = 0.5) -> float:
     """Largest inner size for which the *strongest* layer condition holds in
     a cache of ``cache_bytes`` (times ``safety``). This is the paper's
     'optimal spatial blocking factor' — e.g. blocking the long-range stencil
     for L3 keeps the 3D condition alive past N = 546.
+
+    When the strongest condition holds for *every* size, no blocking is
+    needed: the kernel's bound extent for ``symbol`` is returned when one
+    exists, else ``math.inf`` — so downstream searches see a real upper
+    bound instead of a sentinel block size.
     """
     trans = layer_conditions.transition_points(kernel, cache_bytes * safety, symbol)
     # strongest condition first (largest reuse-distance threshold); fall back
     # to weaker conditions if the strongest never holds for positive sizes
     for tr in reversed(trans):
         if tr.max_value == math.inf:
-            return 1 << 30          # condition holds unconditionally
+            # condition holds unconditionally — the loop's actual extent
+            # (when bound) is the honest "block size", else unbounded
+            bound = kernel.constants.get(symbol)
+            return int(bound) if bound is not None else math.inf
         if tr.max_value > 1:
             return int(tr.max_value)
     return 0
@@ -45,14 +57,18 @@ def lc_block_size(kernel: LoopKernel, cache_bytes: float, symbol: str = "N",
 def blocking_sweep(kernel: LoopKernel, machine: Machine, symbol: str = "N",
                    values=None, models=("ecm",),
                    session: AnalysisSession | None = None,
-                   safety: float = 0.5, **opts):
+                   safety: float = 0.5, grid=None, **opts):
     """Evaluate registered models across candidate blocking factors.
 
     Candidates default to the per-level LC blocking factors (and their
-    halves) from :func:`lc_block_size`.  All points run through one
-    :class:`AnalysisSession`, so the models share predictor volumes; pass
-    a ``session`` (bound to the same ``machine``) to make repeated sweeps
-    — e.g. while tuning ``safety`` — cache hits across calls too.
+    halves) from :func:`lc_block_size`; pass ``grid=(start, stop, step)``
+    for a dense inclusive range instead — the session routes it through
+    the compiled sweep plan, so dense grids cost a handful of symbolic
+    evaluations (one per LC regime) rather than one per point.  All points
+    run through one :class:`AnalysisSession`, so the models share predictor
+    volumes; pass a ``session`` (bound to the same ``machine``) to make
+    repeated sweeps — e.g. while tuning ``safety`` — cache hits across
+    calls too.
 
     Returns ``(values, {model: [result per value]})``.
     """
@@ -61,17 +77,156 @@ def blocking_sweep(kernel: LoopKernel, machine: Machine, symbol: str = "N",
             f"session is bound to machine {session.machine.name!r}, "
             f"but blocking_sweep was given {machine.name!r}")
     sess = session or AnalysisSession(machine)
+    if grid is not None:
+        if values is not None:
+            raise ValueError("pass either values= or grid=, not both")
+        start, stop, step = (int(x) for x in grid)
+        values = range(start, stop + 1, step)        # STOP inclusive
     if values is None:
         cands: set[int] = set()
         for lv in machine.levels:
             b = lc_block_size(kernel, lv.size_bytes, symbol, safety=safety)
-            if 0 < b < (1 << 30):
-                cands.add(b)
-                cands.add(max(1, b // 2))
+            if 0 < b and math.isfinite(b):
+                cands.add(int(b))
+                cands.add(max(1, int(b) // 2))
         values = sorted(cands) or [int(kernel.constants.get(symbol, LANE))]
     values = list(values)       # materialize: generators must survive sweep
     results = sess.sweep(kernel, symbol, values, models=models, **opts)
     return values, results
+
+
+# ----------------------------------------------------------------------
+# Dense grid search over the compiled analytic plan (DESIGN.md §8)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GridSearchResult:
+    """Outcome of a dense 1D/2D blocking-factor search.
+
+    ``scores`` holds the vectorized metric over the full grid — cycles per
+    unit of work for ECM (lower is better), flop/s for Roofline variants
+    (higher is better) — with shape ``(len(grids[0]),)`` or
+    ``(len(grids[0]), len(grids[1]))``.  ``best_result`` is the exact
+    symbolic-path result at the winning point.
+    """
+    model: str
+    metric: str                      # 'cy_per_unit' (min) | 'flops' (max)
+    symbols: tuple[str, ...]
+    grids: tuple[tuple[int, ...], ...]
+    scores: np.ndarray
+    best: dict[str, int]
+    best_score: float
+    best_result: object
+
+    def to_dict(self) -> dict:
+        return {"model": self.model, "metric": self.metric,
+                "symbols": list(self.symbols),
+                "grids": [list(g) for g in self.grids],
+                "scores": self.scores.tolist(),
+                "best": dict(self.best), "best_score": self.best_score,
+                "best_result": self.best_result.to_dict()}
+
+
+def _metric_1d(sess: AnalysisSession, kernel: LoopKernel, symbol: str,
+               vals: list[int], model: str, predictor: str, cores: int,
+               opts: dict) -> np.ndarray:
+    """Vectorized metric over one symbol via the compiled plan; values whose
+    ordering the plan cannot batch are scored through the exact path."""
+    plan = sess.sweep_plan(kernel, symbol, cores)
+    arr = np.asarray(vals, dtype=np.float64)
+    m = resolve_model(model)
+    if m.name.startswith("roofline"):
+        variant = getattr(m, "variant", "IACA")
+        terms = plan.roofline_terms(arr, variant=variant)
+        scores, valid = np.asarray(terms["performance"], dtype=np.float64), \
+            terms["valid"]
+    else:
+        terms = plan.ecm_terms(arr)
+        scores, valid = np.asarray(terms["t_ecm"], dtype=np.float64), \
+            terms["valid"]
+    scores = scores.copy()
+    for i in np.flatnonzero(~valid):
+        res = sess.analyze(kernel.bind(**{symbol: vals[i]}), model,
+                           predictor=predictor, cores=cores, **opts)
+        scores[i] = res.performance if m.name.startswith("roofline") \
+            else res.t_ecm
+    return scores
+
+
+def grid_search(kernel: LoopKernel, machine: Machine, specs,
+                model: str = "ecm", predictor: str = "LC", cores: int = 1,
+                session: AnalysisSession | None = None,
+                **opts) -> GridSearchResult:
+    """Ab-initio blocking-factor search over a dense 1D/2D parameter grid.
+
+    ``specs`` is one or two ``(symbol, values)`` pairs, e.g.
+    ``[("N", range(64, 1025, 8))]`` or 2D ``[("M", ...), ("N", ...)]``.
+    Every grid point is scored through the compiled plan's vectorized
+    closed forms (ECM cycles per unit, or Roofline flop/s); for 2D grids
+    the outer symbol is bound per row and the inner symbol batched, so the
+    cost is ``O(rows × regimes)`` symbolic evaluations instead of
+    ``O(rows × cols)``.  The winning point is re-evaluated through the
+    exact symbolic path and returned as ``best_result``.
+
+    Only analytic predictors can be scored this way: a ``predictor``
+    without a compiled closed form (SIM) raises
+    :class:`~repro.core.compiled.CompileError` rather than silently
+    answering with layer conditions.
+    """
+    specs = [(str(s), [int(v) for v in vs]) for s, vs in specs]
+    if not 1 <= len(specs) <= 2:
+        raise ValueError("grid_search takes one or two (symbol, values) "
+                         f"specs, got {len(specs)}")
+    if resolve_model(model).input_kind != "loop":
+        raise ValueError(f"grid_search needs a loop model, not {model!r}")
+    if not resolve_predictor(predictor).supports_compiled:
+        raise CompileError(
+            "grid_search scores the grid through the compiled analytic "
+            f"plan, but predictor {predictor!r} has no analytic closed "
+            "form to compile")
+    for sym, vs in specs:
+        if not vs:
+            raise ValueError(f"empty grid for symbol {sym!r}")
+    if session is not None and session.machine.name != machine.name:
+        raise ValueError(
+            f"session is bound to machine {session.machine.name!r}, "
+            f"but grid_search was given {machine.name!r}")
+    sess = session or AnalysisSession(machine, cores=cores)
+    maximize = resolve_model(model).name.startswith("roofline")
+
+    # LC metrics are piecewise-constant, so whole regimes tie; prefer the
+    # *largest* tied grid point — bigger blocks amortize the halo and loop
+    # overheads the analytic model does not see.
+    def _best_flat(scores: np.ndarray) -> int:
+        target = scores.max() if maximize else scores.min()
+        return int(np.flatnonzero(scores.ravel() == target).max())
+
+    if len(specs) == 1:
+        sym, vals = specs[0]
+        scores = _metric_1d(sess, kernel, sym, vals, model, predictor,
+                            cores, opts)
+        idx = _best_flat(scores)
+        best = {sym: vals[idx]}
+    else:
+        (sym0, vals0), (sym1, vals1) = specs
+        scores = np.empty((len(vals0), len(vals1)))
+        for i, v0 in enumerate(vals0):
+            row_kernel = kernel.bind(**{sym0: v0})
+            scores[i] = _metric_1d(sess, row_kernel, sym1, vals1, model,
+                                   predictor, cores, opts)
+        i, j = divmod(_best_flat(scores), len(vals1))
+        best = {sym0: vals0[i], sym1: vals1[j]}
+        idx = (i, j)
+    best_score = float(scores[idx])
+    best_result = sess.analyze(kernel.bind(**best), model,
+                               predictor=predictor, cores=cores, **opts)
+    return GridSearchResult(
+        model=resolve_model(model).name,
+        metric="flops" if maximize else "cy_per_unit",
+        symbols=tuple(s for s, _ in specs),
+        grids=tuple(tuple(vs) for _, vs in specs),
+        scores=scores, best=best, best_score=best_score,
+        best_result=best_result)
 
 
 def _round_down(v: int, granule: int) -> int:

@@ -1,0 +1,323 @@
+"""Compiled analytic sweep plans (DESIGN.md §8).
+
+The paper's headline workflows — layer-condition transition points and
+ab-initio blocking-factor prediction (§2.4.2, Listing 5) — evaluate the
+model at *many* parameter points, and every cold point used to pay full
+sympy cost: ``kernel.bind(N=n)`` plus a fresh symbolic LC evaluation per
+point.  A :class:`CompiledSweepPlan` lowers the symbolic pipeline **once**
+per kernel structure and sweep symbol:
+
+  1. the per-array offset orderings and the reuse-distance list become
+     ``sympy.lambdify``'d numpy callables of the sweep symbol (any other
+     unbound symbol is fixed at the generic size, mirroring
+     ``layer_conditions._numeric``);
+  2. ``C_req(t)``, the chosen threshold, hits/misses/write-backs, and the
+     per-level traffic β_k are evaluated for an **entire value grid in one
+     batched numpy call** (`lc_tables`);
+  3. the ECM and Roofline closed forms over those traffic arrays come from
+     :func:`repro.core.ecm.terms_arrays` / :func:`repro.core.roofline
+     .terms_arrays` (`ecm_terms`, `roofline_terms`).
+
+Because LC traffic is piecewise-constant in a single loop symbol (the
+regimes of ``layer_conditions.transition_points``), full model results are
+too — so :meth:`regimes` groups grid values by identical per-level LC
+outcome, and the session evaluates the *symbolic* path once per regime and
+broadcasts the identical frozen result object across the regime.  That
+keeps compiled sweeps bit-for-bit ``to_dict``-identical to the per-point
+symbolic path; two safety valves guarantee it even off the beaten track:
+
+  * a per-value offset-ordering check (the distance expressions assume the
+    template ordering; values whose numeric ordering differs — possible at
+    very small sizes — fall back to per-point symbolic evaluation);
+  * the symbolic volumes of each regime representative are compared
+    against the plan's batched prediction; any mismatch demotes the whole
+    regime to per-point evaluation (see ``AnalysisSession._sweep_compiled``).
+
+Plans are cached by kernel *structure* (sweep symbol unbound) on the
+:class:`~repro.core.session.AnalysisSession`, alongside the existing
+in-core/volume/result tiers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import sympy
+
+from . import incore as _incore
+from . import layer_conditions as _lc
+from .identity import kernel_key
+from .kernel_ir import LoopKernel
+from .machine import Machine
+
+
+class CompileError(ValueError):
+    """The sweep cannot be lowered to a compiled plan (the caller should
+    fall back to the per-point symbolic path, or surface this when the
+    compiled path was explicitly requested)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class _ArrayPlan:
+    """Lowered ordering data for one array's accesses."""
+    name: str
+    key_fns: tuple          # per access (program order): numeric sort key fn
+    write_rank: np.ndarray  # per access: 0 for writes, 1 for reads (tiebreak)
+    template_perm: np.ndarray   # ordering used to derive the distance exprs
+
+
+@dataclasses.dataclass(frozen=True)
+class _EntryPlan:
+    """One reuse-distance entry under the template ordering."""
+    bytes_per_it: float     # element_bytes * inner step (traffic if miss)
+    is_write: bool
+    dist_fn: object         # numpy callable of the sweep symbol, or None (∞)
+    fwd_fn: object          # forward distance, or None (∞)
+
+
+def _lower(expr, sym: sympy.Symbol, consts: dict):
+    """Lower ``expr`` to a numpy callable of ``sym``, mirroring
+    ``layer_conditions._numeric``: bound constants substituted, any other
+    unbound symbol (loop variables, missing sizes) at the generic size."""
+    e = sympy.sympify(expr).subs(consts)
+    extra = e.free_symbols - {sym}
+    if extra:
+        e = e.subs(_lc.generic_subs(extra))
+    return sympy.lambdify(sym, e, modules="numpy")
+
+
+def _eval(fn, values: np.ndarray) -> np.ndarray:
+    out = np.asarray(fn(values), dtype=np.float64)
+    return np.broadcast_to(out, values.shape)
+
+
+class CompiledSweepPlan:
+    """The lowered LC/ECM/Roofline pipeline for one kernel structure, one
+    machine, one sweep symbol, and one core count."""
+
+    def __init__(self, kernel: LoopKernel, machine: Machine, symbol: str,
+                 cores: int = 1):
+        if not isinstance(kernel, LoopKernel):
+            raise CompileError(
+                f"compiled sweeps need LoopKernel IR, got "
+                f"{type(kernel).__name__}")
+        if not str(symbol).isidentifier():
+            raise CompileError(f"invalid sweep symbol {symbol!r}")
+        self.machine = machine
+        self.symbol = str(symbol)
+        self.cores = int(cores)
+        self.sym = sympy.Symbol(self.symbol)
+        # template: the swept constant unbound so distances stay symbolic
+        # in the sweep symbol; containers are shared with the source kernel
+        # so the structural-identity caches keep working.
+        consts = {k: v for k, v in kernel.constants.items()
+                  if k != self.symbol}
+        self.template = dataclasses.replace(kernel, constants=consts)
+        self._consts = {sympy.Symbol(k): v for k, v in consts.items()}
+        self.incore = _incore.analyze_x86(self.template, machine)
+        self.unit = self.template.iterations_per_cacheline(
+            machine.cacheline_bytes)
+        self.levels = _lc.effective_level_sizes(machine, self.cores)
+        self._build()
+
+    # ------------------------------------------------------------------
+    @property
+    def template_key(self) -> tuple:
+        return kernel_key(self.template)
+
+    def _build(self) -> None:
+        tmpl, sym = self.template, self.sym
+        step = tmpl.inner_loop.step
+        tmpl_subs = tmpl.subs()
+        by_array: dict[str, list] = {}
+        for acc in tmpl.accesses:
+            by_array.setdefault(acc.array.name, []).append(acc)
+
+        self.arrays: list[_ArrayPlan] = []
+        self.entries: list[_EntryPlan] = []
+        # candidate thresholds: 0 plus the distinct finite distances
+        # (dedup by srepr, exactly like layer_conditions.thresholds)
+        dedup: dict[str, sympy.Expr] = {}
+        for name, accs in by_array.items():
+            eb = accs[0].array.element_bytes
+            offs = [sympy.expand(a.offset()) for a in accs]
+            # template ordering: ascending numeric offset at the generic
+            # size, writes first among equal offsets, stable — exactly the
+            # sort in layer_conditions.sorted_offsets.
+            perm = sorted(range(len(accs)),
+                          key=lambda i: (_lc._numeric(offs[i], tmpl_subs),
+                                         not accs[i].is_write, i))
+            self.arrays.append(_ArrayPlan(
+                name=name,
+                key_fns=tuple(_lower(o, sym, self._consts) for o in offs),
+                write_rank=np.array([0 if a.is_write else 1 for a in accs],
+                                    dtype=np.int64),
+                template_perm=np.array(perm, dtype=np.int64)))
+            n = len(perm)
+            for rank, i in enumerate(perm):
+                acc = accs[i]
+                back = (None if rank == n - 1 else
+                        sympy.expand((offs[perm[rank + 1]] - offs[i]) * eb))
+                fwd = (None if rank == 0 else
+                       sympy.expand((offs[i] - offs[perm[rank - 1]]) * eb))
+                if back is not None:
+                    dedup.setdefault(sympy.srepr(back), back)
+                self.entries.append(_EntryPlan(
+                    bytes_per_it=float(eb * step), is_write=acc.is_write,
+                    dist_fn=None if back is None else _lower(back, sym,
+                                                             self._consts),
+                    fwd_fn=None if fwd is None else _lower(fwd, sym,
+                                                           self._consts)))
+        self._threshold_fns = [_lower(sympy.Integer(0), sym, self._consts)]
+        self._threshold_fns += [_lower(d, sym, self._consts)
+                                for d in dedup.values()]
+
+    # ------------------------------------------------------------------
+    def validity(self, values: np.ndarray) -> np.ndarray:
+        """Per-value check that the numeric offset ordering matches the
+        template ordering the distance expressions were derived under."""
+        values = np.asarray(values, dtype=np.float64)
+        valid = np.ones(values.shape, dtype=bool)
+        for ap in self.arrays:
+            keys = np.stack([_eval(f, values) for f in ap.key_fns])
+            n = keys.shape[0]
+            idx = np.broadcast_to(np.arange(n)[:, None], keys.shape)
+            ranks = np.broadcast_to(ap.write_rank[:, None], keys.shape)
+            perm = np.lexsort((idx, ranks, keys), axis=0)
+            valid &= (perm == ap.template_perm[:, None]).all(axis=0)
+        return valid
+
+    def lc_tables(self, values) -> tuple[dict[str, dict[str, np.ndarray]],
+                                         np.ndarray]:
+        """Batched LC evaluation: for every value and machine level, the
+        chosen threshold, required cache size, hits/misses/write-backs,
+        and load/write-back traffic (bytes per inner iteration).
+
+        Returns ``(tables, valid)`` where ``tables[level][field]`` is an
+        array over ``values`` and ``valid`` flags values whose offset
+        ordering matches the compiled template (others need the symbolic
+        path)."""
+        values = np.asarray(values, dtype=np.float64)
+        valid = self.validity(values)
+
+        ents = self.entries
+        dist = np.stack([np.full(values.shape, np.inf)
+                         if e.dist_fn is None else _eval(e.dist_fn, values)
+                         for e in ents]) if ents else np.zeros((0,) + values.shape)
+        fwd = np.stack([np.full(values.shape, np.inf)
+                        if e.fwd_fn is None else _eval(e.fwd_fn, values)
+                        for e in ents]) if ents else np.zeros((0,) + values.shape)
+        finite = np.isfinite(dist)
+        bpe = np.array([e.bytes_per_it for e in ents])
+        is_w = np.array([e.is_write for e in ents], dtype=bool)
+
+        thresh = np.stack([_eval(f, values) for f in self._threshold_fns])
+        # C_req[j, v] = sum_i ( d_i <= t_j ? d_i : t_j )   (∞ entries add t)
+        creq = np.where(dist[None, :, :] <= thresh[:, None, :],
+                        dist[None, :, :], thresh[:, None, :]).sum(axis=1)
+
+        tables: dict[str, dict[str, np.ndarray]] = {}
+        for name, size in self.levels:
+            sat = creq <= size
+            # largest satisfying threshold; C_req is monotone in t, so the
+            # satisfying set is a prefix and max() matches the symbolic
+            # "last in ascending order" choice.
+            tn = np.where(sat, thresh, -np.inf).max(axis=0, initial=-np.inf)
+            creq_best = np.where(sat, creq, -np.inf).max(axis=0,
+                                                         initial=-np.inf)
+            hit_mask = finite & (dist <= tn[None, :])
+            hits = hit_mask.sum(axis=0)
+            misses = len(ents) - hits
+            miss_bytes = (bpe[:, None] * ~hit_mask).sum(axis=0)
+            wb_mask = is_w[:, None] & ~(np.isfinite(fwd)
+                                        & (fwd <= tn[None, :]))
+            wb = wb_mask.sum(axis=0)
+            evict_bytes = (bpe[:, None] * wb_mask).sum(axis=0)
+            tables[name] = {
+                "threshold": tn,
+                "c_req": np.where(np.isfinite(creq_best), creq_best, np.inf),
+                "hits": hits, "misses": misses, "writeback_lines": wb,
+                "miss_bytes_per_it": miss_bytes,
+                "evict_bytes_per_it": evict_bytes,
+                "total_bytes_per_it": miss_bytes + evict_bytes,
+            }
+        return tables, valid
+
+    def traffic(self, values) -> tuple[dict[str, np.ndarray], np.ndarray]:
+        """Per-level β_k arrays (bytes per inner iteration) and the
+        validity mask — the batched analog of
+        :func:`~repro.core.layer_conditions.volumes_per_level`."""
+        tables, valid = self.lc_tables(values)
+        return ({name: t["total_bytes_per_it"]
+                 for name, t in tables.items()}, valid)
+
+    # ------------------------------------------------------------------
+    def ecm_terms(self, values) -> dict:
+        """Vectorized closed-form ECM over the grid: scalar ``t_ol`` /
+        ``t_nol`` plus per-level contribution arrays and the ``t_ecm``
+        array (cycles per unit of work)."""
+        from . import ecm as _ecm
+        traffic, valid = self.traffic(values)
+        serial, overl = _ecm.data_terms(self.machine, traffic, self.unit)
+        t_data = self.incore.t_nol + sum((c for _, c in serial),
+                                         np.zeros_like(np.asarray(
+                                             values, dtype=np.float64)))
+        cand = [np.full_like(t_data, self.incore.t_ol), t_data]
+        cand += [np.broadcast_to(np.asarray(c, dtype=np.float64),
+                                 t_data.shape) for _, c in overl]
+        return {"unit_iterations": self.unit, "t_ol": self.incore.t_ol,
+                "t_nol": self.incore.t_nol,
+                "contributions": serial, "overlapped": overl,
+                "t_data": t_data, "t_ecm": np.maximum.reduce(cand),
+                "valid": valid}
+
+    def roofline_terms(self, values, variant: str = "IACA") -> dict:
+        """Vectorized closed-form Roofline over the grid (see
+        :func:`repro.core.roofline.terms_arrays`)."""
+        from . import roofline as _roofline
+        traffic, valid = self.traffic(values)
+        out = _roofline.terms_arrays(self.template, self.machine, traffic,
+                                     cores=self.cores, variant=variant,
+                                     incore_result=self.incore)
+        out["valid"] = valid
+        return out
+
+    # ------------------------------------------------------------------
+    def regimes(self, values) -> tuple[dict[tuple, list[int]], list[int]]:
+        """Group integer grid values by identical per-level LC outcome.
+
+        Returns ``(groups, fallback)``: ``groups`` maps a per-level
+        signature ``((level, miss_bytes, evict_bytes, hits, misses), ...)``
+        to the values in that regime (ascending); ``fallback`` lists values
+        whose offset ordering diverges from the template and must take the
+        per-point symbolic path."""
+        vals = sorted({int(v) for v in np.asarray(values).tolist()})
+        arr = np.array(vals, dtype=np.float64)
+        tables, valid = self.lc_tables(arr)
+        groups: dict[tuple, list[int]] = {}
+        fallback: list[int] = []
+        for i, v in enumerate(vals):
+            if not valid[i]:
+                fallback.append(v)
+                continue
+            sig = tuple(
+                (name, float(t["miss_bytes_per_it"][i]),
+                 float(t["evict_bytes_per_it"][i]),
+                 int(t["hits"][i]), int(t["misses"][i]))
+                for name, t in tables.items())
+            groups.setdefault(sig, []).append(v)
+        return groups, fallback
+
+    @staticmethod
+    def signature_volumes(sig: tuple) -> dict[str, float]:
+        """Per-level total traffic implied by a regime signature — compared
+        against the symbolic path's volumes as an exactness guard."""
+        return {name: miss + evict for name, miss, evict, _, _ in sig}
+
+
+def compile_plan(kernel: LoopKernel, machine: Machine, symbol: str,
+                 cores: int = 1) -> CompiledSweepPlan:
+    """Lower the LC/ECM/Roofline pipeline for ``kernel``'s structure once;
+    see :class:`CompiledSweepPlan`."""
+    return CompiledSweepPlan(kernel, machine, symbol, cores=cores)

@@ -123,10 +123,18 @@ class ECMResult:
                    predictor_params=dict(d.get("predictor_params", {})))
 
 
-def _data_terms(kernel: LoopKernel, machine: Machine, volumes_bpi: dict[str, float],
-                unit: int) -> tuple[list[tuple[str, float]], list[tuple[str, float]]]:
-    serial: list[tuple[str, float]] = []
-    overlapped: list[tuple[str, float]] = []
+def data_terms(machine: Machine, volumes_bpi: dict,
+               unit: int) -> tuple[list[tuple[str, object]], list[tuple[str, object]]]:
+    """Lower per-level traffic β_k into the ECM transfer terms (cycles per
+    unit of work), split into serialized and overlapping contributions.
+
+    Pure elementwise arithmetic: ``volumes_bpi`` values may be floats (the
+    per-point model) or numpy arrays over a whole sweep grid (the compiled
+    plan's closed form, :meth:`repro.core.compiled.CompiledSweepPlan
+    .ecm_terms`), producing per-level cycle arrays in one batched call.
+    """
+    serial: list[tuple[str, object]] = []
+    overlapped: list[tuple[str, object]] = []
     names = machine.level_names
     for i, lv in enumerate(machine.levels):
         vol = volumes_bpi.get(lv.name, 0.0) * unit
@@ -159,7 +167,7 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
     if volumes is None:
         volumes = predict_volumes(kernel, machine, predictor, cores=cores,
                                   sim_kwargs=sim_kwargs)
-    serial, overl = _data_terms(kernel, machine, volumes.bytes_per_it, unit)
+    serial, overl = data_terms(machine, volumes.bytes_per_it, unit)
     return ECMResult(unit_iterations=unit, t_ol=ic.t_ol, t_nol=ic.t_nol,
                      contributions=serial, overlapped=overl,
                      flops_per_unit=ic.flops_per_unit, clock_hz=machine.clock_hz,

@@ -1,0 +1,99 @@
+"""Structural identity keys for kernels and their containers.
+
+The memoizing layers — :class:`~repro.core.session.AnalysisSession`, the
+:mod:`~repro.core.layer_conditions` distance-list cache, and the compiled
+sweep plans (:mod:`repro.core.compiled`) — all need the same notion of
+identity: two kernels with the same loops, accesses, and bound constants
+share cache entries no matter how they were constructed.
+
+Stringifying sympy expressions dominates key construction, and
+``kernel.bind()`` shallow-copies — bound variants share the same loops /
+accesses containers — so those sub-keys are cached by container identity.
+Entries hold a reference to the container, which both validates the id
+and prevents it from being garbage-collected and reused.  The cache is
+bounded: long-running services parse fresh kernels per request, so past
+the cap the oldest (insertion-order) entries are evicted — a re-derived
+key is just a slower cache hit, never a correctness issue.
+"""
+from __future__ import annotations
+
+from .kernel_ir import LoopKernel
+
+_STRUCT_KEYS: dict[int, tuple] = {}
+_STRUCT_KEYS_MAX = 4096
+
+
+def structure_key(container, build) -> tuple:
+    """Identity-cached structural key of a shared (frozen-by-convention)
+    container: ``build(container)`` computed once per container object."""
+    ent = _STRUCT_KEYS.get(id(container))
+    if ent is not None and ent[0] is container:
+        return ent[1]
+    key = build(container)
+    while len(_STRUCT_KEYS) >= _STRUCT_KEYS_MAX:
+        _STRUCT_KEYS.pop(next(iter(_STRUCT_KEYS)))
+    _STRUCT_KEYS[id(container)] = (container, key)
+    return key
+
+
+def loops_key(loops) -> tuple:
+    return tuple((str(lp.var), str(lp.start), str(lp.stop), lp.step)
+                 for lp in loops)
+
+
+def accesses_key(accesses) -> tuple:
+    return tuple((a.array.name, tuple(str(d) for d in a.array.dims),
+                  a.array.element_bytes, tuple(str(i) for i in a.index),
+                  a.is_write)
+                 for a in accesses)
+
+
+def arrays_key(arrays) -> tuple:
+    # insertion order matters: the cache simulator lays arrays out
+    # back-to-back in dict order, so base addresses (and set conflicts)
+    # depend on it — and unaccessed arrays still shift later bases.
+    return tuple((name, tuple(str(d) for d in arr.dims), arr.element_bytes)
+                 for name, arr in arrays.items())
+
+
+def kernel_key(kernel: LoopKernel) -> tuple:
+    """Structural identity of a kernel: loops, accesses, bound constants.
+
+    Everything the analyses read is captured; mutable containers are frozen
+    so the key is hashable.  Two kernels with identical structure share a
+    key no matter how they were constructed.
+    """
+    return (
+        kernel.name,
+        kernel.dtype_bytes,
+        tuple(sorted(kernel.constants.items())),
+        structure_key(kernel.loops, loops_key),
+        structure_key(kernel.accesses, accesses_key),
+        structure_key(kernel.arrays, arrays_key),
+        (kernel.flops.add, kernel.flops.mul, kernel.flops.div,
+         kernel.flops.fma),
+    )
+
+
+def source_key(kernel) -> tuple:
+    """Structural identity of any frontend output: :class:`LoopKernel` via
+    :func:`kernel_key`, anything else through its ``cache_key()`` (the
+    :class:`~repro.core.frontends.KernelSource` contract)."""
+    if isinstance(kernel, LoopKernel):
+        return kernel_key(kernel)
+    ck = getattr(kernel, "cache_key", None)
+    if callable(ck):
+        return ck()
+    raise TypeError(
+        f"cannot key analysis source of type {type(kernel).__name__}: "
+        "expected a LoopKernel or an object with cache_key() — build it "
+        "through repro.core.frontends.load_kernel")
+
+
+def freeze(v):
+    """Recursively convert dicts/lists into hashable tuples for cache keys."""
+    if isinstance(v, dict):
+        return tuple(sorted((k, freeze(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple, set)):
+        return tuple(freeze(x) for x in v)
+    return v

@@ -26,21 +26,55 @@ import math
 
 import sympy
 
+from .identity import accesses_key, structure_key
 from .kernel_ir import Access, LoopKernel
 
 INF = sympy.oo
 
 _GENERIC_SIZE = 100003  # large prime for symbol ordering when sizes unbound
 
+# The generic-size fallback substitution, cached per free-symbol set: sort
+# keys over partially-bound kernels hit the fallback on every comparison,
+# and rebuilding the substitution dict (and re-subbing the same expression)
+# dominated those sorts.  Numeric results are cached too — `analyze` and
+# `c_req` evaluate the same (expr, subs) pairs O(thresholds × entries)
+# times per call.  Both caches are bounded; eviction only costs a re-sub.
+_GENERIC_SUBS: dict[frozenset, dict] = {}
+_NUMERIC_CACHE: dict[tuple, float] = {}
+_CACHE_MAX = 1 << 16
+
+
+def generic_subs(free_symbols) -> dict:
+    """The ``{symbol: _GENERIC_SIZE}`` fallback substitution for a set of
+    unbound symbols, built once per distinct symbol set."""
+    key = frozenset(free_symbols)
+    hit = _GENERIC_SUBS.get(key)
+    if hit is None:
+        if len(_GENERIC_SUBS) >= _CACHE_MAX:
+            _GENERIC_SUBS.clear()
+        hit = _GENERIC_SUBS[key] = {s: _GENERIC_SIZE for s in key}
+    return hit
+
 
 def _numeric(expr, subs: dict) -> float:
+    try:
+        key = (expr, tuple(subs.items()))
+        hit = _NUMERIC_CACHE.get(key)
+    except TypeError:          # unhashable input: evaluate uncached
+        key, hit = None, None
+    if hit is not None:
+        return hit
     v = sympy.sympify(expr).subs(subs)
     try:
-        return float(v)
+        out = float(v)
     except TypeError:
         # unbound symbols left: order with generic large values
-        v = v.subs({s: _GENERIC_SIZE for s in v.free_symbols})
-        return float(v)
+        out = float(v.subs(generic_subs(v.free_symbols)))
+    if key is not None:
+        if len(_NUMERIC_CACHE) >= _CACHE_MAX:
+            _NUMERIC_CACHE.clear()
+        _NUMERIC_CACHE[key] = out
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,38 +102,91 @@ class LCState:
         return self.miss_bytes_per_it + self.evict_bytes_per_it
 
 
-def distance_list(kernel: LoopKernel) -> list[DistanceEntry]:
-    """Build L with per-access backward/forward distances (bytes)."""
+# distance_list (and the per-array sorted-offset lists it derives from) is
+# pure in (accesses structure, bound constants) — the constants only enter
+# through the numeric sort keys — yet the symbolic path recomputed it per
+# bound point, O(thresholds) times per `analyze` call.  Memoized here by the
+# shared structural key; ``kernel.bind()`` shallow-copies, so bound sweep
+# variants share the accesses container and the key is cheap.  Cached lists
+# are treated as immutable by every caller.
+_SORTED_CACHE: dict[tuple, dict] = {}
+_DL_CACHE: dict[tuple, list] = {}
+_THRESH_CACHE: dict[tuple, list] = {}
+_CREQ_CACHE: dict[tuple, sympy.Expr] = {}
+_STRUCT_CACHE_MAX = 2048
+
+
+def _dl_key(kernel: LoopKernel) -> tuple:
+    return (structure_key(kernel.accesses, accesses_key),
+            tuple(sorted(kernel.constants.items())))
+
+
+def _bounded_put(cache: dict, key, value):
+    while len(cache) >= _STRUCT_CACHE_MAX:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
+    return value
+
+
+def sorted_offsets(kernel: LoopKernel) -> dict[str, list[tuple[Access, sympy.Expr]]]:
+    """Per-array ``(access, flattened offset)`` lists in LC order: ascending
+    numeric offset (unbound symbols at the generic size), writes first among
+    equal offsets.  The consecutive differences of each list are the reuse
+    distances; the compiled sweep plans reuse the same ordering."""
+    key = _dl_key(kernel)
+    hit = _SORTED_CACHE.get(key)
+    if hit is not None:
+        return hit
     subs = kernel.subs()
-    entries: list[DistanceEntry] = []
     by_array: dict[str, list[Access]] = {}
     for acc in kernel.accesses:
         by_array.setdefault(acc.array.name, []).append(acc)
+    out: dict[str, list[tuple[Access, sympy.Expr]]] = {}
     for name, accs in by_array.items():
-        eb = accs[0].array.element_bytes
         offs = [(acc, sympy.expand(acc.offset())) for acc in accs]
         offs.sort(key=lambda p: (_numeric(p[1], subs), not p[0].is_write))
+        out[name] = offs
+    return _bounded_put(_SORTED_CACHE, key, out)
+
+
+def distance_list(kernel: LoopKernel) -> list[DistanceEntry]:
+    """Build L with per-access backward/forward distances (bytes)."""
+    key = _dl_key(kernel)
+    hit = _DL_CACHE.get(key)
+    if hit is not None:
+        return hit
+    entries: list[DistanceEntry] = []
+    for name, offs in sorted_offsets(kernel).items():
+        eb = offs[0][0].array.element_bytes
         n = len(offs)
         for i, (acc, off) in enumerate(offs):
             back = INF if i == n - 1 else sympy.expand((offs[i + 1][1] - off) * eb)
             fwd = INF if i == 0 else sympy.expand((off - offs[i - 1][1]) * eb)
             entries.append(DistanceEntry(acc, back, fwd))
-    return entries
+    return _bounded_put(_DL_CACHE, key, entries)
 
 
 def thresholds(kernel: LoopKernel) -> list[sympy.Expr]:
     """Distinct candidate thresholds (finite distances), ascending."""
+    key = _dl_key(kernel)
+    hit = _THRESH_CACHE.get(key)
+    if hit is not None:
+        return hit
     subs = kernel.subs()
     seen: dict[str, sympy.Expr] = {}
     for e in distance_list(kernel):
         if e.distance is not INF:
             seen[sympy.srepr(e.distance)] = e.distance
     vals = sorted(seen.values(), key=lambda v: _numeric(v, subs))
-    return [sympy.Integer(0)] + vals
+    return _bounded_put(_THRESH_CACHE, key, [sympy.Integer(0)] + vals)
 
 
 def c_req(kernel: LoopKernel, t: sympy.Expr) -> sympy.Expr:
     """Symbolic required cache size (bytes) for threshold ``t``."""
+    key = (_dl_key(kernel), t)
+    hit = _CREQ_CACHE.get(key)
+    if hit is not None:
+        return hit
     subs = kernel.subs()
     tn = _numeric(t, subs)
     total: sympy.Expr = sympy.Integer(0)
@@ -108,7 +195,7 @@ def c_req(kernel: LoopKernel, t: sympy.Expr) -> sympy.Expr:
             total = total + e.distance
         else:
             total = total + t
-    return sympy.expand(total)
+    return _bounded_put(_CREQ_CACHE, key, sympy.expand(total))
 
 
 def analyze(kernel: LoopKernel, cache_bytes: float) -> LCState:
@@ -184,6 +271,21 @@ def transition_points(kernel: LoopKernel, cache_bytes: float,
     return out
 
 
+def effective_level_sizes(machine, cores: int = 1) -> list[tuple[str, float]]:
+    """Per-level cache capacity visible to one core: shared caches are
+    divided among ``cores`` (the paper's ``--cores`` switch).  The single
+    source of truth for both the symbolic path (:func:`volumes_per_level`)
+    and the compiled sweep plans (:mod:`repro.core.compiled`), whose regime
+    grouping must see exactly the same sizes."""
+    out = []
+    for lv in machine.levels:
+        size = lv.size_bytes
+        if lv.cores_per_group > 1 and cores > 1:
+            size = size / min(cores, lv.cores_per_group) * 1.0
+        out.append((lv.name, size))
+    return out
+
+
 def volumes_per_level(kernel: LoopKernel, machine,
                       cores: int = 1) -> dict[str, LCState]:
     """Per-level LC states; the traffic between level k and k+1 is
@@ -191,10 +293,5 @@ def volumes_per_level(kernel: LoopKernel, machine,
     β_k input to both ECM and Roofline. Shared caches are divided among
     ``cores`` (the paper's ``--cores`` switch).
     """
-    out: dict[str, LCState] = {}
-    for lv in machine.levels:
-        size = lv.size_bytes
-        if lv.cores_per_group > 1 and cores > 1:
-            size = size / min(cores, lv.cores_per_group) * 1.0
-        out[lv.name] = analyze(kernel, size)
-    return out
+    return {name: analyze(kernel, size)
+            for name, size in effective_level_sizes(machine, cores)}

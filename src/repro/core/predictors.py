@@ -57,10 +57,18 @@ class CachePredictor(abc.ABC):
     simulation options the CLI calls ``sim_kwargs`` (warm-up/measure
     windows, seeds); analytic predictors leave it False and never see
     them.
+
+    ``supports_compiled`` declares whether the prediction is analytic in
+    the loop sizes and can be lowered by :mod:`repro.core.compiled` into a
+    batched sweep plan (true for LC, whose traffic is piecewise-constant
+    in a single loop symbol; false for the simulator, whose output has no
+    closed form).  The session's sweep auto-routing checks this instead of
+    hard-coding predictor names.
     """
 
     name: str = "?"
     uses_sim_kwargs: bool = False
+    supports_compiled: bool = False
 
     @abc.abstractmethod
     def predict(self, kernel: LoopKernel, machine: Machine, cores: int = 1,
@@ -81,6 +89,7 @@ class LayerConditionPredictor(CachePredictor):
     """Analytic LC prediction (paper §2.4.2) — smooth in the loop sizes."""
 
     name = "LC"
+    supports_compiled = True
 
     def predict(self, kernel: LoopKernel, machine: Machine, cores: int = 1,
                 **kwargs) -> VolumePrediction:

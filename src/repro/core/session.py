@@ -36,97 +36,14 @@ import dataclasses
 
 from . import incore
 from .cachesim import normalize_sim_kwargs
+from .compiled import CompiledSweepPlan, CompileError, compile_plan
+from .identity import freeze as _freeze
+from .identity import kernel_key, source_key  # noqa: F401  (re-export)
 from .incore import InCoreResult
 from .kernel_ir import LoopKernel
 from .machine import Machine
 from .model_api import MODEL_REGISTRY, Result, resolve_model
 from .predictors import VolumePrediction, predict_volumes, resolve_predictor
-
-
-# Stringifying sympy expressions dominates key construction, and
-# ``kernel.bind()`` shallow-copies — bound variants share the same loops /
-# accesses containers — so those sub-keys are cached by container identity.
-# Entries hold a reference to the container, which both validates the id
-# and prevents it from being garbage-collected and reused.  The cache is
-# bounded: long-running services parse fresh kernels per request, so past
-# the cap the oldest (insertion-order) entries are evicted — a re-derived
-# key is just a slower cache hit, never a correctness issue.
-_STRUCT_KEYS: dict[int, tuple] = {}
-_STRUCT_KEYS_MAX = 4096
-
-
-def _structure_key(container, build) -> tuple:
-    ent = _STRUCT_KEYS.get(id(container))
-    if ent is not None and ent[0] is container:
-        return ent[1]
-    key = build(container)
-    while len(_STRUCT_KEYS) >= _STRUCT_KEYS_MAX:
-        _STRUCT_KEYS.pop(next(iter(_STRUCT_KEYS)))
-    _STRUCT_KEYS[id(container)] = (container, key)
-    return key
-
-
-def _loops_key(loops) -> tuple:
-    return tuple((str(lp.var), str(lp.start), str(lp.stop), lp.step)
-                 for lp in loops)
-
-
-def _accesses_key(accesses) -> tuple:
-    return tuple((a.array.name, tuple(str(d) for d in a.array.dims),
-                  a.array.element_bytes, tuple(str(i) for i in a.index),
-                  a.is_write)
-                 for a in accesses)
-
-
-def _arrays_key(arrays) -> tuple:
-    # insertion order matters: the cache simulator lays arrays out
-    # back-to-back in dict order, so base addresses (and set conflicts)
-    # depend on it — and unaccessed arrays still shift later bases.
-    return tuple((name, tuple(str(d) for d in arr.dims), arr.element_bytes)
-                 for name, arr in arrays.items())
-
-
-def kernel_key(kernel: LoopKernel) -> tuple:
-    """Structural identity of a kernel: loops, accesses, bound constants.
-
-    Everything the analyses read is captured; mutable containers are frozen
-    so the key is hashable.  Two kernels with identical structure share a
-    key no matter how they were constructed.
-    """
-    return (
-        kernel.name,
-        kernel.dtype_bytes,
-        tuple(sorted(kernel.constants.items())),
-        _structure_key(kernel.loops, _loops_key),
-        _structure_key(kernel.accesses, _accesses_key),
-        _structure_key(kernel.arrays, _arrays_key),
-        (kernel.flops.add, kernel.flops.mul, kernel.flops.div,
-         kernel.flops.fma),
-    )
-
-
-def source_key(kernel) -> tuple:
-    """Structural identity of any frontend output: :class:`LoopKernel` via
-    :func:`kernel_key`, anything else through its ``cache_key()`` (the
-    :class:`~repro.core.frontends.KernelSource` contract)."""
-    if isinstance(kernel, LoopKernel):
-        return kernel_key(kernel)
-    ck = getattr(kernel, "cache_key", None)
-    if callable(ck):
-        return ck()
-    raise TypeError(
-        f"cannot key analysis source of type {type(kernel).__name__}: "
-        "expected a LoopKernel or an object with cache_key() — build it "
-        "through repro.core.frontends.load_kernel")
-
-
-def _freeze(v):
-    """Recursively convert dicts/lists into hashable tuples for cache keys."""
-    if isinstance(v, dict):
-        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
-    if isinstance(v, (list, tuple, set)):
-        return tuple(_freeze(x) for x in v)
-    return v
 
 
 @dataclasses.dataclass
@@ -137,6 +54,10 @@ class SessionStats:
     volume_misses: int = 0
     result_hits: int = 0
     result_misses: int = 0
+    # compiled-sweep tier (DESIGN.md §8)
+    plan_compiles: int = 0          # sweep plans lowered (per structure)
+    plan_broadcasts: int = 0        # points answered by regime broadcast
+    plan_fallback_points: int = 0   # points demoted to per-point symbolic
 
     @property
     def hits(self) -> int:
@@ -160,18 +81,28 @@ class AnalysisSession:
         self._incore: dict[tuple, InCoreResult] = {}
         self._volumes: dict[tuple, VolumePrediction] = {}
         self._results: dict[tuple, Result] = {}
+        self._plans: dict[tuple, CompiledSweepPlan] = {}
 
     # ------------------------------------------------------------------
     def clear(self) -> None:
         self._incore.clear()
         self._volumes.clear()
         self._results.clear()
+        self._plans.clear()
         self.stats = SessionStats()
 
     def _defaults(self, predictor, cores, sim_kwargs):
         return (self.predictor if predictor is None else predictor,
                 self.cores if cores is None else cores,
                 self.sim_kwargs if sim_kwargs is None else sim_kwargs)
+
+    def _loop_key(self, model_name: str, kernel: LoopKernel, predictor: str,
+                  cores: int, sim_kwargs: dict, opts: dict) -> tuple:
+        """Result-cache key for a loop model run (shared by :meth:`analyze`
+        and the compiled-sweep broadcast, which prefills the same tier)."""
+        return (model_name, kernel_key(kernel), self.machine.name,
+                predictor.upper(), cores,
+                self._sim_key(predictor, sim_kwargs), _freeze(opts))
 
     def _sim_key(self, predictor: str, sim_kwargs: dict) -> tuple:
         """Cache-key fragment for the simulation options.
@@ -254,9 +185,8 @@ class AnalysisSession:
                 f"{loop_models} or a loop frontend (c/builder/trace)")
         predictor, cores, sim_kwargs = self._defaults(predictor, cores,
                                                       sim_kwargs)
-        key = (m.name, kernel_key(kernel), self.machine.name,
-               predictor.upper(), cores, self._sim_key(predictor, sim_kwargs),
-               _freeze(opts))
+        key = self._loop_key(m.name, kernel, predictor, cores, sim_kwargs,
+                             opts)
         hit = self._results.get(key)
         if hit is not None:
             self.stats.result_hits += 1
@@ -271,20 +201,78 @@ class AnalysisSession:
         return res
 
     # ------------------------------------------------------------------
+    def sweep_plan(self, kernel: LoopKernel, param: str,
+                   cores: int | None = None) -> CompiledSweepPlan:
+        """The compiled sweep plan for ``kernel``'s structure with ``param``
+        unbound (lowered once, then cached alongside the other tiers)."""
+        cores = self.cores if cores is None else cores
+        template = dataclasses.replace(
+            kernel, constants={k: v for k, v in kernel.constants.items()
+                               if k != param})
+        key = (kernel_key(template), str(param), cores)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = compile_plan(kernel, self.machine, param, cores=cores)
+            self._plans[key] = plan
+            self.stats.plan_compiles += 1
+        return plan
+
+    def _compile_blocker(self, param, values, models, predictor) -> str | None:
+        """Why this sweep cannot take the compiled path (None if it can)."""
+        if not resolve_predictor(predictor).supports_compiled:
+            return (f"predictor {predictor!r} has no analytic closed form "
+                    "to compile")
+        for m in models:
+            if resolve_model(m).input_kind != "loop":
+                return f"model {str(m)!r} does not consume LoopKernel IR"
+        if not values:
+            return "empty sweep"
+        for v in values:
+            try:
+                int(v)
+            except (TypeError, ValueError):
+                return f"non-integer sweep value {v!r}"
+        if not str(param).isidentifier():
+            return f"sweep parameter {param!r} is not a symbol name"
+        return None
+
     def sweep(self, kernel: LoopKernel, param: str, values,
               models=("ecm",), predictor: str | None = None,
               cores: int | None = None, sim_kwargs: dict | None = None,
-              **opts) -> dict[str, list[Result]]:
+              compiled: bool | str = "auto", **opts) -> dict[str, list[Result]]:
         """Evaluate ``models`` at every ``param`` value (the batch API).
 
         Returns ``{model_name: [result per value]}``.  Each point's
         predictor volumes and in-core analysis are computed once and shared
         by all requested models; repeating the sweep hits the result cache.
+
+        ``compiled`` selects the evaluation engine: ``"auto"`` (default)
+        routes single-symbol numeric sweeps under an analytic predictor
+        through a :class:`~repro.core.compiled.CompiledSweepPlan` — the
+        whole grid is batched through vectorized closed forms, the symbolic
+        path runs once per LC regime, and results are bit-for-bit identical
+        to the per-point path.  ``True`` requires the compiled path (raises
+        :class:`~repro.core.compiled.CompileError` when inapplicable, e.g.
+        under the SIM predictor); ``False`` forces per-point evaluation.
         """
         if not isinstance(kernel, LoopKernel):
             raise TypeError(
                 "sweep() varies symbolic loop constants, which only "
                 f"LoopKernel sources carry (got {type(kernel).__name__})")
+        predictor, cores, sim_kwargs = self._defaults(predictor, cores,
+                                                      sim_kwargs)
+        values = list(values)
+        if compiled not in (True, False, "auto"):
+            raise ValueError(f"compiled must be True/False/'auto', "
+                             f"got {compiled!r}")
+        if compiled is not False:
+            blocker = self._compile_blocker(param, values, models, predictor)
+            if blocker is None and (compiled is True or len(values) >= 4):
+                return self._sweep_compiled(kernel, param, values, models,
+                                            predictor, cores, sim_kwargs,
+                                            opts)
+            if compiled is True:
+                raise CompileError(f"compiled sweep requested but {blocker}")
         out: dict[str, list[Result]] = {str(m): [] for m in models}
         for v in values:
             bound = kernel.bind(**{param: int(v)})
@@ -293,3 +281,75 @@ class AnalysisSession:
                     self.analyze(bound, m, predictor=predictor, cores=cores,
                                  sim_kwargs=sim_kwargs, **opts))
         return out
+
+    def _sweep_compiled(self, kernel, param, values, models, predictor,
+                        cores, sim_kwargs, opts) -> dict[str, list[Result]]:
+        """Batched sweep over a compiled plan (DESIGN.md §8).
+
+        The plan groups grid values into LC regimes in one vectorized
+        call; each regime's representative runs the ordinary memoized
+        symbolic path (:meth:`analyze`) and its frozen result object is
+        broadcast — and cached under the per-point keys — for the rest of
+        the regime.  A regime whose representative's symbolic volumes
+        disagree with the plan's batched prediction, and any value whose
+        offset ordering diverges from the compiled template, falls back to
+        per-point evaluation, so results are always identical to
+        ``compiled=False``.
+        """
+        plan = self.sweep_plan(kernel, param, cores)
+        ints = [int(v) for v in values]
+        bound = {v: kernel.bind(**{param: v}) for v in set(ints)}
+        keys: dict[tuple, tuple] = {}
+        done: dict[tuple, Result] = {}
+        missing: set[int] = set()
+        model_names = [str(m) for m in models]
+        for m, mname in zip(models, model_names):
+            rname = resolve_model(m).name
+            for v in bound:
+                key = self._loop_key(rname, bound[v], predictor, cores,
+                                     sim_kwargs, opts)
+                keys[(mname, v)] = key
+                hit = self._results.get(key)
+                if hit is not None:
+                    self.stats.result_hits += 1
+                    done[(mname, v)] = hit
+                else:
+                    missing.add(v)
+
+        def _point(v, m):
+            return self.analyze(bound[v], m, predictor=predictor,
+                                cores=cores, sim_kwargs=sim_kwargs, **opts)
+
+        if missing:
+            groups, fallback = plan.regimes(sorted(missing))
+            for m, mname in zip(models, model_names):
+                for sig, members in groups.items():
+                    todo = [v for v in members if (mname, v) not in done]
+                    if not todo:
+                        continue
+                    rep, rest = todo[0], todo[1:]
+                    res = done[(mname, rep)] = _point(rep, m)
+                    if not rest:
+                        continue
+                    # exactness guard: the symbolic volumes of the regime
+                    # representative must equal the batched prediction
+                    vol = self.volumes(bound[rep], predictor, cores,
+                                       sim_kwargs)
+                    want = plan.signature_volumes(sig)
+                    if (set(vol.bytes_per_it) == set(want)
+                            and all(vol.bytes_per_it[k] == want[k]
+                                    for k in want)):
+                        for v in rest:
+                            self._results[keys[(mname, v)]] = res
+                            done[(mname, v)] = res
+                            self.stats.plan_broadcasts += 1
+                    else:
+                        self.stats.plan_fallback_points += len(rest)
+                        for v in rest:
+                            done[(mname, v)] = _point(v, m)
+                for v in fallback:
+                    if (mname, v) not in done:
+                        self.stats.plan_fallback_points += 1
+                        done[(mname, v)] = _point(v, m)
+        return {mname: [done[(mname, v)] for v in ints]
+                for mname in model_names}

@@ -1,0 +1,414 @@
+"""Tests for the compiled analytic sweep tier (DESIGN.md §8): exactness of
+the batched LC/ECM/Roofline closed forms against the per-point symbolic
+path (including values *at* LC transition points), session auto-routing,
+the dense blocking grid search, and the satellite fixes (memoized distance
+lists, `_numeric` fallback caching, `lc_block_size` without sentinels)."""
+import json
+import math
+import pathlib
+
+import numpy as np
+import pytest
+import sympy
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro import cli
+from repro.core import (AnalysisSession, CompileError, blocking, compiled,
+                        layer_conditions, load_machine, parse_kernel)
+from repro.core.kernel_ir import FlopCount, make_stencil
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+
+@pytest.fixture(scope="module")
+def ivy():
+    return load_machine("IVY")
+
+
+@pytest.fixture(scope="module")
+def longrange():
+    return parse_kernel((STENCILS / "stencil_3d_long_range.c").read_text(),
+                        constants={"M": 130, "N": 1015})
+
+
+def _star2d(radius: int, n: int, m: int = 40):
+    reads = [("a", "j", f"i+{c}") for c in range(-radius, radius + 1)]
+    reads += [("a", f"j+{c}", "i") for c in range(-radius, radius + 1) if c]
+    return make_stencil(
+        "star2d", {"a": ("M", "N"), "b": ("M", "N")},
+        [("j", radius, f"M-{radius}"), ("i", radius, f"N-{radius}")],
+        reads=reads, writes=[("b", "j", "i")],
+        flops=FlopCount(add=len(reads) - 1, mul=1),
+        constants={"M": m, "N": n})
+
+
+def _star3d(radius: int, n: int, m: int = 30):
+    reads = [("a", "k", "j", f"i+{c}") for c in range(-radius, radius + 1)]
+    reads += [("a", "k", f"j+{c}", "i")
+              for c in range(-radius, radius + 1) if c]
+    reads += [("a", f"k+{c}", "j", "i")
+              for c in range(-radius, radius + 1) if c]
+    return make_stencil(
+        "star3d", {"a": ("M", "N", "N"), "b": ("M", "N", "N")},
+        [("k", radius, f"M-{radius}"), ("j", radius, f"N-{radius}"),
+         ("i", radius, f"N-{radius}")],
+        reads=reads, writes=[("b", "k", "j", "i")],
+        flops=FlopCount(add=len(reads) - 1, mul=1),
+        constants={"M": m, "N": n})
+
+
+def _transition_values(kernel, machine, lo=8, hi=2500) -> list[int]:
+    """Values at and around every finite LC transition, plus a spread —
+    exactly the points where a compiled regime table could go wrong."""
+    vals = {lo, hi, (lo + hi) // 2, (lo + hi) // 3}
+    for lv in machine.levels:
+        for tr in layer_conditions.transition_points(kernel, lv.size_bytes,
+                                                     "N"):
+            if math.isfinite(tr.max_value) and tr.max_value > 0:
+                for v in (math.floor(tr.max_value) - 1,
+                          math.floor(tr.max_value),
+                          math.ceil(tr.max_value),
+                          math.ceil(tr.max_value) + 1):
+                    if lo <= v <= hi:
+                        vals.add(int(v))
+    return sorted(vals)
+
+
+# ----------------------------------------------------------------------
+class TestExactness:
+    def test_paper_stencil_identity_across_transitions(self, ivy, longrange):
+        values = _transition_values(longrange, ivy)
+        sym = AnalysisSession(ivy).sweep(
+            longrange, "N", values, models=["ecm", "roofline-iaca"],
+            compiled=False)
+        comp = AnalysisSession(ivy).sweep(
+            longrange, "N", values, models=["ecm", "roofline-iaca"],
+            compiled=True)
+        for m in sym:
+            for a, b in zip(sym[m], comp[m]):
+                assert a.to_dict() == b.to_dict()
+
+    @given(st.integers(1, 3), st.integers(60, 1500))
+    @settings(max_examples=6, deadline=None)
+    def test_random_star2d_identity(self, radius, n):
+        ivy = load_machine("IVY")
+        k = _star2d(radius, n)
+        values = _transition_values(k, ivy, lo=8 * radius + 4, hi=2000)
+        sym = AnalysisSession(ivy).sweep(k, "N", values, compiled=False)
+        comp = AnalysisSession(ivy).sweep(k, "N", values, compiled=True)
+        for a, b in zip(sym["ecm"], comp["ecm"]):
+            assert a.to_dict() == b.to_dict()
+
+    @given(st.integers(1, 2), st.integers(40, 700))
+    @settings(max_examples=4, deadline=None)
+    def test_random_star3d_identity(self, radius, n):
+        ivy = load_machine("IVY")
+        k = _star3d(radius, n)
+        values = _transition_values(k, ivy, lo=8 * radius + 4, hi=900)
+        sym = AnalysisSession(ivy).sweep(k, "N", values,
+                                         models=["roofline-iaca"],
+                                         compiled=False)
+        comp = AnalysisSession(ivy).sweep(k, "N", values,
+                                          models=["roofline-iaca"],
+                                          compiled=True)
+        for a, b in zip(sym["roofline-iaca"], comp["roofline-iaca"]):
+            assert a.to_dict() == b.to_dict()
+
+    def test_ordering_flip_falls_back_and_stays_exact(self, ivy):
+        """At tiny sizes the numeric offset ordering differs from the
+        compiled template (e.g. a row step N smaller than the stencil
+        radius); those values must be detected and demoted to the
+        per-point path, keeping results identical."""
+        k = _star2d(3, 100)
+        values = list(range(2, 20)) + [100, 500]
+        sym = AnalysisSession(ivy).sweep(k, "N", values, compiled=False)
+        sess = AnalysisSession(ivy)
+        comp = sess.sweep(k, "N", values, compiled=True)
+        for a, b in zip(sym["ecm"], comp["ecm"]):
+            assert a.to_dict() == b.to_dict()
+        assert sess.stats.plan_fallback_points > 0
+        plan = sess.sweep_plan(k, "N")
+        valid = plan.validity(np.array([2.0, 3.0, 100.0]))
+        assert list(valid) == [False, False, True]
+
+    def test_lc_tables_match_symbolic_states(self, ivy, longrange):
+        """The batched LC engine reproduces every LCState field the
+        symbolic analyzer computes, per level and per value."""
+        plan = compiled.compile_plan(longrange, ivy, "N")
+        values = _transition_values(longrange, ivy)[:12]
+        tables, valid = plan.lc_tables(np.array(values, dtype=float))
+        assert valid.all()
+        for i, v in enumerate(values):
+            states = layer_conditions.volumes_per_level(
+                longrange.bind(N=v), ivy)
+            for name, stt in states.items():
+                t = tables[name]
+                assert t["hits"][i] == stt.hits
+                assert t["misses"][i] == stt.misses
+                assert t["writeback_lines"][i] == stt.writeback_lines
+                assert t["miss_bytes_per_it"][i] == stt.miss_bytes_per_it
+                assert t["evict_bytes_per_it"][i] == stt.evict_bytes_per_it
+                assert t["c_req"][i] == stt.c_req_bytes
+
+    def test_ecm_closed_form_matches_results(self, ivy, longrange):
+        plan = compiled.compile_plan(longrange, ivy, "N")
+        values = [200, 546, 547, 1015, 2000]
+        terms = plan.ecm_terms(np.array(values, dtype=float))
+        sess = AnalysisSession(ivy)
+        for i, v in enumerate(values):
+            res = sess.analyze(longrange.bind(N=v), "ecm")
+            assert terms["t_ecm"][i] == pytest.approx(res.t_ecm, rel=1e-12)
+
+
+# ----------------------------------------------------------------------
+class TestSessionRouting:
+    def test_auto_routes_and_broadcasts(self, ivy, longrange):
+        sess = AnalysisSession(ivy)
+        values = list(range(100, 400, 10))
+        out = sess.sweep(longrange, "N", values)
+        assert len(out["ecm"]) == len(values)
+        assert sess.stats.plan_compiles == 1
+        assert sess.stats.plan_broadcasts > 0
+        # far fewer symbolic evaluations than points
+        assert sess.stats.result_misses < len(values) // 2
+        # repeated sweep is pure cache hits, no new symbolic work
+        misses = sess.stats.result_misses
+        again = sess.sweep(longrange, "N", values)
+        assert sess.stats.result_misses == misses
+        assert [r.to_dict() for r in again["ecm"]] == \
+            [r.to_dict() for r in out["ecm"]]
+
+    def test_plan_cached_across_sweeps(self, ivy, longrange):
+        sess = AnalysisSession(ivy)
+        sess.sweep(longrange, "N", range(100, 150, 10))
+        sess.sweep(longrange, "N", range(500, 550, 10))
+        assert sess.stats.plan_compiles == 1
+
+    def test_small_sweeps_stay_symbolic_on_auto(self, ivy, longrange):
+        sess = AnalysisSession(ivy)
+        sess.sweep(longrange, "N", [100, 200])
+        assert sess.stats.plan_compiles == 0
+
+    def test_sim_predictor_not_compiled(self, ivy):
+        k = parse_kernel((STENCILS / "stencil_2d5pt.c").read_text(),
+                         constants={"M": 40, "N": 60})
+        sess = AnalysisSession(ivy, predictor="SIM",
+                               sim_kwargs={"warmup_rows": 2,
+                                           "measure_rows": 1})
+        out = sess.sweep(k, "N", [40, 50, 60, 70, 80])
+        assert sess.stats.plan_compiles == 0
+        assert len(out["ecm"]) == 5
+        with pytest.raises(CompileError):
+            sess.sweep(k, "N", [40, 50, 60], compiled=True)
+
+    def test_compiled_true_rejects_non_loop_model(self, ivy, longrange):
+        sess = AnalysisSession(ivy)
+        with pytest.raises(CompileError):
+            sess.sweep(longrange, "N", [100, 200, 300],
+                       models=["hlo-roofline"], compiled=True)
+
+    def test_compiled_flag_validation(self, ivy, longrange):
+        sess = AnalysisSession(ivy)
+        with pytest.raises(ValueError):
+            sess.sweep(longrange, "N", [100, 200], compiled="yes")
+
+
+# ----------------------------------------------------------------------
+class TestGridSearch:
+    def test_1d_grid_matches_pointwise(self, ivy, longrange):
+        gs = blocking.grid_search(longrange, ivy,
+                                  [("N", range(64, 1025, 64))])
+        assert gs.scores.shape == (16,)
+        sess = AnalysisSession(ivy)
+        for v, score in zip(gs.grids[0], gs.scores):
+            exact = sess.analyze(longrange.bind(N=v), "ecm").t_ecm
+            assert score == pytest.approx(exact, rel=1e-12)
+        assert gs.best["N"] in gs.grids[0]
+        assert gs.best_score == pytest.approx(min(gs.scores))
+        assert gs.best_result.t_ecm == pytest.approx(gs.best_score)
+
+    def test_ties_prefer_largest_block(self, ivy, longrange):
+        gs = blocking.grid_search(longrange, ivy,
+                                  [("N", range(64, 513, 16))])
+        tied = [v for v, s in zip(gs.grids[0], gs.scores)
+                if s == gs.best_score]
+        assert gs.best["N"] == max(tied)
+
+    def test_2d_grid(self, ivy):
+        k = parse_kernel((STENCILS / "stencil_3d7pt.c").read_text(),
+                         constants={"M": 130, "N": 600})
+        gs = blocking.grid_search(
+            k, ivy, [("M", [32, 64]), ("N", range(32, 257, 32))])
+        assert gs.scores.shape == (2, 8)
+        assert set(gs.best) == {"M", "N"}
+        sess = AnalysisSession(ivy)
+        exact = sess.analyze(k.bind(**gs.best), "ecm").t_ecm
+        assert gs.best_score == pytest.approx(exact, rel=1e-12)
+
+    def test_roofline_metric_maximizes(self, ivy, longrange):
+        gs = blocking.grid_search(longrange, ivy,
+                                  [("N", range(64, 513, 64))],
+                                  model="roofline-iaca")
+        assert gs.metric == "flops"
+        assert gs.best_score == pytest.approx(max(gs.scores))
+
+    def test_rejects_bad_specs(self, ivy, longrange):
+        with pytest.raises(ValueError):
+            blocking.grid_search(longrange, ivy, [])
+        with pytest.raises(ValueError):
+            blocking.grid_search(longrange, ivy, [("N", [])])
+        with pytest.raises(ValueError):
+            blocking.grid_search(longrange, ivy, [("N", [64])],
+                                 model="hlo-roofline")
+
+    def test_rejects_sim_predictor(self, ivy, longrange):
+        """The grid is scored through the compiled analytic plan, so a SIM
+        request must error out, not silently answer with LC."""
+        with pytest.raises(CompileError):
+            blocking.grid_search(longrange, ivy, [("N", [64, 128])],
+                                 predictor="SIM")
+
+
+# ----------------------------------------------------------------------
+class TestSatellites:
+    def test_lc_block_size_unconditional_returns_extent(self, ivy):
+        """A condition that holds for every size must report the loop's
+        bound extent (or ∞ when unbound), not a ``1 << 30`` sentinel."""
+        src = """
+        double a[N]; double b[N];
+        for (int i = 1; i < N - 1; i++) {
+          b[i] = a[i-1] + a[i] + a[i+1];
+        }"""
+        huge = 1 << 24
+        k = parse_kernel(src, constants={"N": 4096})
+        assert blocking.lc_block_size(k, huge, "N") == 4096
+        k_unbound = parse_kernel(src)
+        assert blocking.lc_block_size(k_unbound, huge, "N") == math.inf
+
+    def test_blocking_sweep_skips_unbounded_candidates(self, ivy):
+        src = """
+        double a[N]; double b[N];
+        for (int i = 1; i < N - 1; i++) {
+          b[i] = a[i-1] + a[i] + a[i+1];
+        }"""
+        k = parse_kernel(src, constants={"N": 4096})
+        values, results = blocking.blocking_sweep(k, ivy, "N")
+        assert values and all(v < (1 << 30) for v in values)
+        assert len(results["ecm"]) == len(values)
+
+    def test_blocking_sweep_grid(self, ivy, longrange):
+        values, results = blocking.blocking_sweep(
+            longrange, ivy, "N", grid=(100, 200, 10))
+        assert values == list(range(100, 201, 10))
+        assert len(results["ecm"]) == len(values)
+        with pytest.raises(ValueError):
+            blocking.blocking_sweep(longrange, ivy, "N",
+                                    values=[100], grid=(100, 200, 10))
+
+    def test_numeric_multiple_unbound_symbols(self):
+        """Regression: expressions with several unbound symbols order via
+        the generic-size fallback, and repeated calls hit the cache."""
+        n, m = sympy.Symbol("N"), sympy.Symbol("M")
+        expr = 8 * n * m + 3 * n
+        g = layer_conditions._GENERIC_SIZE
+        want = float(8 * g * g + 3 * g)
+        assert layer_conditions._numeric(expr, {}) == want
+        assert layer_conditions._numeric(expr, {}) == want       # cached
+        # partially bound: only the remaining symbol goes generic
+        assert layer_conditions._numeric(expr, {m: 2}) == \
+            float(16 * g + 3 * g)
+        # the fallback substitution dict is shared per symbol set
+        assert layer_conditions.generic_subs({n, m}) is \
+            layer_conditions.generic_subs({m, n})
+
+    def test_distance_list_memoized_by_structure(self, longrange):
+        assert layer_conditions.distance_list(longrange) is \
+            layer_conditions.distance_list(longrange)
+        # bind() shares containers, so bound variants share the cache
+        # entry for equal constants...
+        assert layer_conditions.distance_list(longrange.bind(N=640)) is \
+            layer_conditions.distance_list(longrange.bind(N=640))
+        # ...but different constants key separately (sort order may change)
+        assert layer_conditions.distance_list(longrange.bind(N=640)) is not \
+            layer_conditions.distance_list(longrange.bind(N=641))
+
+    def test_session_kernel_key_reexport(self):
+        from repro.core.identity import kernel_key as ik
+        from repro.core.session import kernel_key as sk
+        assert sk is ik
+
+
+# ----------------------------------------------------------------------
+def run_cli(argv, capsys):
+    rc = cli.main(argv)
+    cap = capsys.readouterr()
+    return rc, cap.out, cap.err
+
+
+class TestCLI:
+    def test_sweep_dense_json_identical_to_symbolic(self, capsys):
+        base = ["sweep", "configs/stencils/stencil_3d7pt.c", "-m", "IVY",
+                "--param", "N", "--range", "50", "260", "30",
+                "-D", "M", "40", "--json"]
+        rc, plain, _ = run_cli(base, capsys)
+        assert rc == 0
+        rc, dense, _ = run_cli(base + ["--dense"], capsys)
+        assert rc == 0
+        assert json.loads(dense) == json.loads(plain)
+        assert len(json.loads(dense)["ecm"]) == 8
+
+    def test_sweep_dense_rejects_sim(self, capsys):
+        rc, _, err = run_cli(
+            ["sweep", "configs/stencils/stencil_2d5pt.c", "-m", "IVY",
+             "--param", "N", "--range", "40", "80", "10", "-D", "M", "20",
+             "--cache-predictor", "SIM", "--dense"], capsys)
+        assert rc == 2
+        assert "no analytic closed form" in err
+
+    def test_blocking_grid_text_and_json(self, capsys):
+        base = ["blocking", "configs/stencils/stencil_3d_long_range.c",
+                "-m", "IVY", "-D", "M", "130", "-D", "N", "1015",
+                "--grid", "64", "512", "64"]
+        rc, out, _ = run_cli(base, capsys)
+        assert rc == 0
+        assert "best: N =" in out and "cy/unit" in out
+        rc, out, _ = run_cli(base + ["--json"], capsys)
+        assert rc == 0
+        d = json.loads(out)
+        assert d["symbols"] == ["N"] and len(d["scores"]) == 8
+        assert d["best_result"]["model"] == "ecm"
+
+    def test_blocking_grid_rejects_sim(self, capsys):
+        rc, _, err = run_cli(
+            ["blocking", "configs/stencils/stencil_2d5pt.c", "-m", "IVY",
+             "-D", "M", "200", "-D", "N", "400", "--cache-predictor", "SIM",
+             "--grid", "32", "64", "16"], capsys)
+        assert rc == 2
+        assert "no analytic closed form" in err
+
+    def test_blocking_grid2_requires_grid(self, capsys):
+        rc, _, err = run_cli(
+            ["blocking", "configs/stencils/stencil_3d7pt.c", "-m", "IVY",
+             "-D", "M", "40", "-D", "N", "100",
+             "--grid2", "M", "16", "64", "16"], capsys)
+        assert rc == 2
+        assert "--grid2 needs --grid" in err
+
+    def test_blocking_unbounded_json_is_null(self, tmp_path, capsys):
+        src = ("double a[N]; double b[N];\n"
+               "for (int i = 1; i < N - 1; i++) {\n"
+               "  b[i] = a[i-1] + a[i] + a[i+1];\n}\n")
+        p = tmp_path / "s1d.c"
+        p.write_text(src)
+        rc, out, _ = run_cli(
+            ["blocking", str(p), "-m", "IVY", "-D", "N", "4096", "--json"],
+            capsys)
+        assert rc == 0
+        d = json.loads(out)          # Infinity would not be valid JSON
+        assert all(r["block"] is None or isinstance(r["block"], int)
+                   for r in d["levels"])
