@@ -1,0 +1,102 @@
+"""In-core port-scheduler benchmark: the vectorized scheduler
+(:func:`repro.core.incore.schedule`) vs the per-op pure-Python reference
+(:func:`~repro.core.incore.naive_schedule`), pinning two properties:
+
+1. **Exactness** — identical per-port occupation, per-kind cycles, and
+   dependence-chain critical path on every stream (also pinned by
+   tests/test_incore.py).
+2. **Speed** — on large op streams (a radius-4 star body unrolled tens of
+   thousands of iterations, the shape a trace of a whole Pallas grid step
+   produces) the vectorized scheduler is at least 10× faster.  A missed
+   target is reported and marked, not fatal — wall-clock ratios are
+   load-dependent; ``--enforce`` (or ``benchmarks.run --enforce``) turns
+   a miss into a failure.
+
+Results are also written as JSON (``benchmarks/out/incore_bench.json``),
+which CI uploads as a workflow artifact for the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.incore_bench [--smoke] [--enforce]
+"""
+import argparse
+import json
+import pathlib
+import time
+
+from repro.core import load_machine
+from repro.core.incore import naive_schedule, schedule, synthetic_stream
+
+SPEEDUP_TARGET = 10.0
+OUT_JSON = pathlib.Path(__file__).resolve().parent / "out" / \
+    "incore_bench.json"
+
+# (n_products, n_iters): a 25-point star body, unrolled
+CASES = [(13, 200), (13, 5_000), (13, 50_000)]
+SMOKE_CASES = [(13, 200), (13, 5_000)]
+
+
+def _parity(a: dict, b: dict) -> bool:
+    tol = 1e-9
+    return (abs(a["critical_path"] - b["critical_path"]) < tol
+            and set(a["occupation"]) == set(b["occupation"])
+            and all(abs(a["occupation"][p] - b["occupation"][p]) < tol
+                    for p in a["occupation"])
+            and all(abs(a["kind_cycles"][k] - b["kind_cycles"][k]) < tol
+                    for k in set(a["kind_cycles"]) | set(b["kind_cycles"])))
+
+
+def _time(fn, *args, repeats: int = 3) -> tuple[float, dict]:
+    best, res = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best, res
+
+
+def run(smoke: bool = False, enforce: bool = False) -> str:
+    table = load_machine("IVY").ports
+    lines = ["vectorized port scheduler vs per-op Python reference "
+             f"(target >= {SPEEDUP_TARGET:.0f}x on the largest stream):"]
+    rows = []
+    worst_large = float("inf")
+    for n_products, n_iters in (SMOKE_CASES if smoke else CASES):
+        stream = synthetic_stream(n_products, n_iters=n_iters)
+        t_vec, r_vec = _time(schedule, stream, table)
+        t_naive, r_naive = _time(naive_schedule, stream, table,
+                                 repeats=1 if n_iters > 10_000 else 2)
+        assert _parity(r_vec, r_naive), \
+            f"scheduler divergence on {len(stream)}-op stream"
+        speedup = t_naive / t_vec if t_vec > 0 else float("inf")
+        if n_iters == max(it for _, it in (SMOKE_CASES if smoke else CASES)):
+            worst_large = min(worst_large, speedup)
+        rows.append({"n_products": n_products, "n_iters": n_iters,
+                     "ops": len(stream), "edges": stream.n_edges,
+                     "t_vectorized_s": t_vec, "t_naive_s": t_naive,
+                     "speedup": speedup})
+        lines.append(f"  {len(stream):>9,} ops ({stream.n_edges:>9,} edges)"
+                     f": vector {t_vec * 1e3:8.2f} ms | naive "
+                     f"{t_naive * 1e3:9.2f} ms | {speedup:7.1f}x  "
+                     "(exact parity)")
+    ok = worst_large >= SPEEDUP_TARGET
+    lines.append(f"largest-stream speedup {worst_large:.1f}x vs target "
+                 f"{SPEEDUP_TARGET:.0f}x -> "
+                 + ("OK" if ok else "MISSED (report-only"
+                    + (", --enforce failing)" if enforce else ")")))
+    OUT_JSON.parent.mkdir(parents=True, exist_ok=True)
+    OUT_JSON.write_text(json.dumps(
+        {"speedup_target": SPEEDUP_TARGET, "smoke": smoke,
+         "target_met": ok, "cases": rows}, indent=2, sort_keys=True))
+    lines.append(f"wrote {OUT_JSON.relative_to(OUT_JSON.parents[2])}")
+    if enforce and not ok:
+        raise AssertionError(
+            f"port-scheduler speedup {worst_large:.1f}x below the "
+            f"{SPEEDUP_TARGET:.0f}x target")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--enforce", action="store_true")
+    args = ap.parse_args()
+    print(run(smoke=args.smoke, enforce=args.enforce))

@@ -12,10 +12,10 @@ compiled-sweep benchmarks) into hard failures instead of reports."""
 import argparse
 import time
 
-from benchmarks import (cli_smoke, kernels_bench, paper_ecm, paper_fig5,
-                        paper_fig34, paper_listing4, paper_listing5,
-                        paper_table1, roofline_table, session_cache,
-                        sim_bench, sweep_bench, tpu_ecm)
+from benchmarks import (cli_smoke, incore_bench, kernels_bench, paper_ecm,
+                        paper_fig5, paper_fig34, paper_listing4,
+                        paper_listing5, paper_table1, roofline_table,
+                        session_cache, sim_bench, sweep_bench, tpu_ecm)
 
 # every section takes the parsed args so speed gates can honor --enforce
 SECTIONS = [
@@ -32,6 +32,8 @@ SECTIONS = [
      lambda a: paper_fig5.run()),
     ("Cache simulator — scalar vs vectorized backend",
      lambda a: sim_bench.run(enforce=a.enforce)),
+    ("In-core port scheduler — vectorized vs per-op reference",
+     lambda a: incore_bench.run(enforce=a.enforce)),
     ("Compiled sweep plans — batched LC/ECM closed forms",
      lambda a: sweep_bench.run(enforce=a.enforce)),
     ("AnalysisSession — memoized sweep micro-benchmark",
@@ -54,6 +56,8 @@ SMOKE = [
      lambda a: paper_fig5.run()),
     ("Cache simulator — scalar vs vectorized backend (smoke)",
      lambda a: sim_bench.run(smoke=True, enforce=a.enforce)),
+    ("In-core port scheduler — vectorized vs per-op reference (smoke)",
+     lambda a: incore_bench.run(smoke=True, enforce=a.enforce)),
     ("Compiled sweep plans — batched LC/ECM closed forms (smoke)",
      lambda a: sweep_bench.run(smoke=True, enforce=a.enforce)),
     ("AnalysisSession — memoized sweep micro-benchmark",

@@ -50,6 +50,13 @@ def _add_common(sp: argparse.ArgumentParser) -> None:
     sp.add_argument("--cache-predictor", default="LC", choices=["LC", "SIM"],
                     help="traffic predictor: layer conditions or cache "
                          "simulator (default LC)")
+    sp.add_argument("--incore", default="simple",
+                    choices=["simple", "ports"],
+                    help="in-core model: 'simple' aggregates the machine "
+                         "file's per-kind port rates, 'ports' schedules "
+                         "the lowered op stream against the machine's "
+                         "ports: table (per-port occupation + latency "
+                         "bound; default simple)")
     sp.add_argument("--sim-backend", default="auto",
                     choices=["auto", "scalar", "vector"],
                     help="cache-simulator engine (SIM only): 'vector' runs "
@@ -152,7 +159,8 @@ def cmd_analyze(args) -> int:
     results = []
     for model in _models(args):
         res = sess.analyze(kernel, model, predictor=args.cache_predictor,
-                           cores=args.cores, sim_kwargs=_sim_kwargs(args))
+                           cores=args.cores, sim_kwargs=_sim_kwargs(args),
+                           incore=args.incore)
         results.append((model, res))
     if args.json:
         print(json.dumps([r.to_dict() for _, r in results], indent=2,
@@ -162,8 +170,10 @@ def cmd_analyze(args) -> int:
     defines = " ".join(f"-D {n} {v}" for n, v in args.define)
     backend = (f" --sim-backend {args.sim_backend}"
                if args.cache_predictor.upper() == "SIM" else "")
+    incore = (f" --incore {args.incore}"
+              if args.incore != "simple" else "")
     print(f"{kname}  -m {args.machine} "
-          f"--cache-predictor {args.cache_predictor}{backend} "
+          f"--cache-predictor {args.cache_predictor}{backend}{incore} "
           f"{defines}".rstrip())
     for model, res in results:
         print()
@@ -178,7 +188,7 @@ def cmd_sweep(args) -> int:
     models = _models(args)
     out = api.sweep(kernel, machine, args.param, values, models=models,
                     predictor=args.cache_predictor, cores=args.cores,
-                    sim_kwargs=_sim_kwargs(args),
+                    sim_kwargs=_sim_kwargs(args), incore=args.incore,
                     compiled=True if args.dense else "auto")
     if args.json:
         print(json.dumps(
@@ -209,7 +219,7 @@ def _cmd_blocking_grid(args, machine, kernel) -> int:
     gs = blocking.grid_search(kernel, machine, specs,
                               model=args.performance_model,
                               predictor=args.cache_predictor,
-                              cores=args.cores)
+                              cores=args.cores, incore=args.incore)
     if args.json:
         print(json.dumps(gs.to_dict(), indent=2, sort_keys=True))
         return 0

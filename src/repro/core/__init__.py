@@ -20,6 +20,8 @@ from .c_parser import parse_kernel  # noqa: F401
 from .frontends import (FRONTEND_REGISTRY, HLOProgram,  # noqa: F401
                         KernelFrontend, kernel_spec, load_kernel,
                         register_frontend, resolve_frontend, trace_kernel)
+from .incore import (INCORE_REGISTRY, InCoreModel,  # noqa: F401
+                     InCoreResult, register_incore, resolve_incore)
 from .kernel_ir import FlopCount, LoopKernel  # noqa: F401
 from .machine import Machine, load as load_machine  # noqa: F401
 from .model_api import (MODEL_REGISTRY, PerformanceModel,  # noqa: F401

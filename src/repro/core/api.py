@@ -91,6 +91,7 @@ def analyze(source: Any, machine: Machine | str, model: str = "ecm",
             predictor: str = "LC", *, frontend: str | None = None,
             name: str | None = None, constants: dict | None = None,
             cores: int = 1, sim_kwargs: dict | None = None,
+            incore: str = "simple",
             session: AnalysisSession | None = None,
             frontend_opts: dict | None = None, **opts) -> Result:
     """Analyze any kernel source under any registered model.
@@ -98,12 +99,14 @@ def analyze(source: Any, machine: Machine | str, model: str = "ecm",
     ``source`` is resolved through the frontend registry (``frontend=``
     forces one; otherwise it is detected).  ``name``/``constants`` go to the
     frontend (``constants`` is the CLI's ``-D``); ``predictor``, ``cores``,
-    ``sim_kwargs`` and remaining ``opts`` go to the model.  For the SIM
-    predictor, ``sim_kwargs`` carries the simulator options — including
-    ``backend`` ('auto'/'scalar'/'vector', the CLI's ``--sim-backend``) —
-    which the session normalizes into its cache keys and the result
-    records in ``predictor_params``.  Pass ``session=`` to use your own
-    memoizing session instead of the pooled per-machine one.
+    ``sim_kwargs``, ``incore`` and remaining ``opts`` go to the model.
+    For the SIM predictor, ``sim_kwargs`` carries the simulator options —
+    including ``backend`` ('auto'/'scalar'/'vector', the CLI's
+    ``--sim-backend``) — which the session normalizes into its cache keys
+    and the result records in ``predictor_params``.  ``incore`` names the
+    registered in-core model ('simple'/'ports', the CLI's ``--incore``);
+    results record it in ``incore_model``.  Pass ``session=`` to use your
+    own memoizing session instead of the pooled per-machine one.
     """
     mach = resolve_machine(machine)
     kernel = _load_kernel_cached(source, frontend, name, constants,
@@ -114,14 +117,14 @@ def analyze(source: Any, machine: Machine | str, model: str = "ecm",
             f"session is bound to machine {sess.machine.name!r}, "
             f"not {mach.name!r}")
     return sess.analyze(kernel, model, predictor=predictor, cores=cores,
-                        sim_kwargs=sim_kwargs, **opts)
+                        sim_kwargs=sim_kwargs, incore=incore, **opts)
 
 
 def sweep(source: Any, machine: Machine | str, param: str, values,
           models=("ecm",), predictor: str = "LC", *,
           frontend: str | None = None, name: str | None = None,
           constants: dict | None = None, cores: int = 1,
-          sim_kwargs: dict | None = None,
+          sim_kwargs: dict | None = None, incore: str = "simple",
           session: AnalysisSession | None = None,
           frontend_opts: dict | None = None,
           compiled: bool | str = "auto",
@@ -145,4 +148,5 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
             f"not {mach.name!r}")
     return sess.sweep(kernel, param, values, models=models,
                       predictor=predictor, cores=cores,
-                      sim_kwargs=sim_kwargs, compiled=compiled, **opts)
+                      sim_kwargs=sim_kwargs, incore=incore,
+                      compiled=compiled, **opts)

@@ -132,7 +132,7 @@ def _metric_1d(sess: AnalysisSession, kernel: LoopKernel, symbol: str,
                opts: dict) -> np.ndarray:
     """Vectorized metric over one symbol via the compiled plan; values whose
     ordering the plan cannot batch are scored through the exact path."""
-    plan = sess.sweep_plan(kernel, symbol, cores)
+    plan = sess.sweep_plan(kernel, symbol, cores, opts.get("incore"))
     arr = np.asarray(vals, dtype=np.float64)
     m = resolve_model(model)
     if m.name.startswith("roofline"):

@@ -97,7 +97,7 @@ class CompiledSweepPlan:
     machine, one sweep symbol, and one core count."""
 
     def __init__(self, kernel: LoopKernel, machine: Machine, symbol: str,
-                 cores: int = 1):
+                 cores: int = 1, incore_result=None, incore: str = "simple"):
         if not isinstance(kernel, LoopKernel):
             raise CompileError(
                 f"compiled sweeps need LoopKernel IR, got "
@@ -115,7 +115,10 @@ class CompiledSweepPlan:
                   if k != self.symbol}
         self.template = dataclasses.replace(kernel, constants=consts)
         self._consts = {sympy.Symbol(k): v for k, v in consts.items()}
-        self.incore = _incore.analyze_x86(self.template, machine)
+        # in-core is structure-only: one result (precomputed by the
+        # session's memoized tier, or derived here) serves the whole grid
+        self.incore = incore_result if incore_result is not None else \
+            _incore.analyze(self.template, machine, model=incore)
         self.unit = self.template.iterations_per_cacheline(
             machine.cacheline_bytes)
         self.levels = _lc.effective_level_sizes(machine, self.cores)
@@ -263,7 +266,8 @@ class CompiledSweepPlan:
         t_data = self.incore.t_nol + sum((c for _, c in serial),
                                          np.zeros_like(np.asarray(
                                              values, dtype=np.float64)))
-        cand = [np.full_like(t_data, self.incore.t_ol), t_data]
+        cand = [np.full_like(t_data, self.incore.t_ol), t_data,
+                np.full_like(t_data, self.incore.t_latency)]
         cand += [np.broadcast_to(np.asarray(c, dtype=np.float64),
                                  t_data.shape) for _, c in overl]
         return {"unit_iterations": self.unit, "t_ol": self.incore.t_ol,
@@ -317,7 +321,9 @@ class CompiledSweepPlan:
 
 
 def compile_plan(kernel: LoopKernel, machine: Machine, symbol: str,
-                 cores: int = 1) -> CompiledSweepPlan:
+                 cores: int = 1, incore_result=None,
+                 incore: str = "simple") -> CompiledSweepPlan:
     """Lower the LC/ECM/Roofline pipeline for ``kernel``'s structure once;
     see :class:`CompiledSweepPlan`."""
-    return CompiledSweepPlan(kernel, machine, symbol, cores=cores)
+    return CompiledSweepPlan(kernel, machine, symbol, cores=cores,
+                             incore_result=incore_result, incore=incore)

@@ -13,11 +13,11 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from . import incore
+from . import incore as _incore
 from .incore import InCoreResult
 from .kernel_ir import LoopKernel
 from .machine import Machine
-from .predictors import VolumePrediction, predict_volumes
+from .predictors import VolumePrediction, predict_volumes, predictor_tag
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,14 +34,29 @@ class ECMResult:
     # JSON-round-tripped reports are distinguishable
     predictor: str = "LC"
     predictor_params: dict = dataclasses.field(default_factory=dict)
+    # in-core provenance (mirrors the predictor fields): which registered
+    # InCoreModel produced T_OL/T_nOL, plus its full breakdown (per-port
+    # occupation, latency bound) for reports and JSON consumers
+    incore_model: str = "simple"
+    incore: dict = dataclasses.field(default_factory=dict)
 
     @property
     def t_data(self) -> float:
         return self.t_nol + sum(c for _, c in self.contributions)
 
     @property
+    def t_incore_latency(self) -> float:
+        """The in-core model's loop-carried latency bound (cy per unit;
+        0 unless the 'ports' scheduler found a binding carried chain)."""
+        return float(self.incore.get("t_latency", 0.0)) if self.incore \
+            else 0.0
+
+    @property
     def t_ecm(self) -> float:
-        cand = [self.t_ol, self.t_data]
+        # a loop-carried dependence chain bounds the core below, data
+        # transfers notwithstanding — keep T_ECM consistent with the
+        # in-core breakdown the result carries
+        cand = [self.t_ol, self.t_data, self.t_incore_latency]
         cand += [c for _, c in self.overlapped]
         return max(cand)
 
@@ -59,14 +74,13 @@ class ECMResult:
     @property
     def predictor_tag(self) -> str:
         """Compact provenance tag, e.g. ``LC`` or ``SIM:vector``."""
-        backend = self.predictor_params.get("backend")
-        return self.predictor + (f":{backend}" if backend else "")
+        return predictor_tag(self.predictor, self.predictor_params)
 
     def notation(self) -> str:
         segs = " | ".join(f"{c:.1f}" for _, c in self.contributions)
         return ("{ " + f"{self.t_ol:.1f} || {self.t_nol:.1f}"
                 + (f" | {segs}" if segs else "") + " } cy/CL"
-                + f" [{self.predictor_tag}]")
+                + f" [{self.predictor_tag}] [{self.incore_model}]")
 
     def notation_cumulative(self) -> str:
         acc = self.t_nol
@@ -103,6 +117,8 @@ class ECMResult:
             "clock_hz": self.clock_hz,
             "predictor": self.predictor,
             "predictor_params": dict(self.predictor_params),
+            "incore_model": self.incore_model,
+            "incore": dict(self.incore),
             # derived, for consumers that only read the dict:
             "t_data": self.t_data,
             "t_ecm": self.t_ecm,
@@ -120,7 +136,9 @@ class ECMResult:
                    flops_per_unit=float(d["flops_per_unit"]),
                    clock_hz=float(d["clock_hz"]),
                    predictor=str(d.get("predictor", "LC")),
-                   predictor_params=dict(d.get("predictor_params", {})))
+                   predictor_params=dict(d.get("predictor_params", {})),
+                   incore_model=str(d.get("incore_model", "simple")),
+                   incore=dict(d.get("incore", {})))
 
 
 def data_terms(machine: Machine, volumes_bpi: dict,
@@ -152,18 +170,21 @@ def data_terms(machine: Machine, volumes_bpi: dict,
 def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
           cores: int = 1, sim_kwargs: dict | None = None,
           volumes: VolumePrediction | None = None,
-          incore_result: InCoreResult | None = None) -> ECMResult:
+          incore_result: InCoreResult | None = None,
+          incore: str = "simple") -> ECMResult:
     """Build the full ECM model: in-core + cache prediction + data terms.
 
     ``predictor`` names a registered :class:`~repro.core.predictors
-    .CachePredictor` ('LC' or 'SIM'), mirroring the paper's
-    ``--cache-predictor`` switch.  A precomputed ``volumes`` prediction
-    and/or ``incore_result`` (e.g. from an
-    :class:`~repro.core.session.AnalysisSession`) short-circuits the
-    corresponding analysis so sweeps and multi-model reports share work.
+    .CachePredictor` ('LC' or 'SIM') and ``incore`` a registered
+    :class:`~repro.core.incore.InCoreModel` ('simple' or 'ports'),
+    mirroring the CLI's ``--cache-predictor`` / ``--incore`` switches.  A
+    precomputed ``volumes`` prediction and/or ``incore_result`` (e.g.
+    from an :class:`~repro.core.session.AnalysisSession`) short-circuits
+    the corresponding analysis so sweeps and multi-model reports share
+    work (``incore_result`` takes precedence over the ``incore`` name).
     """
     unit = kernel.iterations_per_cacheline(machine.cacheline_bytes)
-    ic = incore_result or incore.analyze_x86(kernel, machine)
+    ic = incore_result or _incore.analyze(kernel, machine, model=incore)
     if volumes is None:
         volumes = predict_volumes(kernel, machine, predictor, cores=cores,
                                   sim_kwargs=sim_kwargs)
@@ -172,4 +193,5 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
                      contributions=serial, overlapped=overl,
                      flops_per_unit=ic.flops_per_unit, clock_hz=machine.clock_hz,
                      predictor=volumes.predictor,
-                     predictor_params=dict(volumes.params))
+                     predictor_params=dict(volumes.params),
+                     incore_model=ic.model, incore=ic.to_dict())

@@ -75,6 +75,22 @@ def kernel_key(kernel: LoopKernel) -> tuple:
     )
 
 
+def incore_key(kernel: LoopKernel) -> tuple:
+    """Structure-only identity for in-core analysis: everything it reads
+    (flop counts, access widths, loop steps, dtype) — but *not* the bound
+    constants or the kernel name.  ``bind()``-ed sweep variants share one
+    in-core entry, which is what lets sessions and compiled sweep plans
+    evaluate in-core once per kernel structure for a whole grid.
+    """
+    return (
+        kernel.dtype_bytes,
+        structure_key(kernel.loops, loops_key),
+        structure_key(kernel.accesses, accesses_key),
+        (kernel.flops.add, kernel.flops.mul, kernel.flops.div,
+         kernel.flops.fma),
+    )
+
+
 def source_key(kernel) -> tuple:
     """Structural identity of any frontend output: :class:`LoopKernel` via
     :func:`kernel_key`, anything else through its ``cache_key()`` (the

@@ -1,0 +1,35 @@
+"""In-core execution modeling — the replaceable IACA analog (paper §2.5).
+
+Kerncraft delegates in-core prediction to IACA and aggregates its per-port
+throughput into the ECM's overlapping (``T_OL``) / non-overlapping
+(``T_nOL``) classes; this package is that component rebuilt as a registry
+subsystem (DESIGN.md §4), paralleling the
+:class:`~repro.core.predictors.CachePredictor` registry:
+
+* :mod:`~repro.core.incore.ir` — the ISA-neutral **op-stream IR** both
+  loop frontends lower into (op kind, operand width, dependence edges,
+  loop-carried distances);
+* :mod:`~repro.core.incore.ports` — the ``"ports"`` model: a vectorized
+  **port scheduler** (the OSACA analog) driven by the machine file's
+  ``ports:`` table, reporting per-port occupation, the throughput bound,
+  and the dependence-chain latency bound;
+* :mod:`~repro.core.incore.simple` — the ``"simple"`` model: the original
+  machine-file heuristic, preserved as the default;
+* :mod:`~repro.core.incore.registry` — the :class:`InCoreModel` ABC and
+  :data:`INCORE_REGISTRY`; everything above (ECM, Roofline, sessions,
+  compiled sweep plans, the CLI ``--incore`` switch) resolves models by
+  name through :func:`resolve_incore` / :func:`analyze`.
+
+Every model returns the same :class:`InCoreResult`; results are
+structure-only (bound constants never enter), so sessions and compiled
+sweep plans evaluate in-core once per kernel structure.
+"""
+from .ir import (KIND_CODE, KINDS, CarriedDep, OpStream,  # noqa: F401
+                 lower_kernel, synthetic_stream)
+from .ports import (PortSchedulerModel, naive_schedule,  # noqa: F401
+                    schedule)
+from .registry import (INCORE_REGISTRY, InCoreModel, analyze,  # noqa: F401
+                       register_incore, resolve_incore)
+from .result import InCoreResult  # noqa: F401
+from .simple import (SimpleInCoreModel, analyze_tpu,  # noqa: F401
+                     analyze_x86, applicable_peak, peak_performance)

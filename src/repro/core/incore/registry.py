@@ -1,0 +1,60 @@
+"""The InCoreModel registry (DESIGN.md §4): one dispatch point for the
+paper's replaceable in-core component.
+
+Kerncraft delegates in-core prediction to IACA and aggregates its per-port
+throughput into the machine file's overlapping/non-overlapping classes
+(paper §2.5); IACA is closed-source and x86-only, so the component is
+designed to be swapped (the OSACA line of work).  Mirroring the
+:class:`~repro.core.predictors.CachePredictor` registry, every in-core
+model registers here and everything above — ECM, Roofline, sessions,
+compiled sweep plans, the CLI ``--incore`` switch — resolves models by
+name through :func:`resolve_incore` and never branches on them.
+"""
+from __future__ import annotations
+
+import abc
+
+from ..kernel_ir import LoopKernel
+from ..machine import Machine
+from .result import InCoreResult
+
+
+class InCoreModel(abc.ABC):
+    """One in-core execution model: kernel + machine → :class:`InCoreResult`.
+
+    Results are keyed structurally by the memoizing session — in-core
+    analysis reads only the kernel's *structure* (flops, access widths,
+    inner step, dtype), never its bound constants, so one analysis serves
+    every point of a parameter sweep.
+    """
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def analyze(self, kernel: LoopKernel, machine: Machine,
+                **opts) -> InCoreResult:
+        ...
+
+
+INCORE_REGISTRY: dict[str, InCoreModel] = {}
+
+
+def register_incore(cls: type[InCoreModel]) -> type[InCoreModel]:
+    INCORE_REGISTRY[cls.name.lower()] = cls()
+    return cls
+
+
+def resolve_incore(name: str) -> InCoreModel:
+    try:
+        return INCORE_REGISTRY[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown in-core model {name!r}; "
+            f"available: {sorted(INCORE_REGISTRY)}") from None
+
+
+def analyze(kernel: LoopKernel, machine: Machine, model: str = "simple",
+            **opts) -> InCoreResult:
+    """Run the named in-core model — the uniform ``incore=`` dispatch the
+    performance models, sessions, and the CLI all route through."""
+    return resolve_incore(model).analyze(kernel, machine, **opts)

@@ -1,7 +1,7 @@
-"""In-core execution model — the IACA analog (paper §2.5).
+"""The ``"simple"`` in-core model — the original machine-file heuristic.
 
-IACA is closed-source and x86-only, so Kerncraft-for-TPU replaces it with an
-analytic port-throughput model driven by the machine description:
+Divides per-kind flop counts by the machine file's per-port rates
+(``FLOPs per cycle``) and load/store bytes by the L1 port bandwidths:
 
 * x86 mode: one ADD and one MUL FP port of the native SIMD width, separate
   load/store ports with byte-per-cycle throughputs. Cycles are reported per
@@ -10,29 +10,20 @@ analytic port-throughput model driven by the machine description:
   non-overlapping part ``T_nOL`` (loads), exactly like Kerncraft aggregates
   IACA's per-port throughput into the two classes listed in the machine file.
 
-* TPU mode: the MXU executes contraction flops, the VPU elementwise flops;
-  VMEM->VREG loads and VREG->VMEM stores have their own throughputs. ``T_OL``
-  is the compute (MXU/VPU) time, ``T_nOL`` the VMEM register traffic.
+* TPU mode (:func:`analyze_tpu`): the MXU executes contraction flops, the
+  VPU elementwise flops; VMEM->VREG loads and VREG->VMEM stores have their
+  own throughputs. ``T_OL`` is the compute (MXU/VPU) time, ``T_nOL`` the
+  VMEM register traffic.
+
+This model stays the default; the ``"ports"`` scheduler
+(:mod:`repro.core.incore.ports`) is the registry's OSACA analog.
 """
 from __future__ import annotations
 
-import dataclasses
-
-from .kernel_ir import LoopKernel
-from .machine import Machine
-
-
-@dataclasses.dataclass(frozen=True)
-class InCoreResult:
-    unit_iterations: int          # iterations per unit of work (one CL)
-    t_ol: float                   # cy per unit: overlapping (arith + stores)
-    t_nol: float                  # cy per unit: non-overlapping (loads)
-    port_cycles: dict[str, float]
-    flops_per_unit: float
-
-    @property
-    def t_core(self) -> float:
-        return max(self.t_ol, self.t_nol)
+from ..kernel_ir import LoopKernel
+from ..machine import Machine
+from .registry import InCoreModel, register_incore
+from .result import InCoreResult
 
 
 def analyze_x86(kernel: LoopKernel, machine: Machine,
@@ -66,8 +57,8 @@ def analyze_x86(kernel: LoopKernel, machine: Machine,
     return InCoreResult(
         unit_iterations=unit, t_ol=t_ol, t_nol=t_nol,
         port_cycles={"ADD": t_add, "MUL": t_mul, "DIV": t_div,
-                     "LOAD": t_load, "STORE": t_store},
-        flops_per_unit=fc.total * unit)
+                     "FMA": t_fma, "LOAD": t_load, "STORE": t_store},
+        flops_per_unit=fc.total * unit, model="simple")
 
 
 def peak_performance(machine: Machine, precision: str = "DP") -> float:
@@ -80,16 +71,25 @@ def applicable_peak(kernel: LoopKernel, machine: Machine,
     """P_max of paper §1.2.1: peak reduced by the add/mul imbalance of the
     kernel (flops per cycle). With a balanced mix this is the full peak;
     with a pure-add or pure-mul kernel it is half (one port idle).
+
+    A machine declaring an FMA rate issues FMA uops on the FMA port; only
+    machines without one (e.g. Ivy Bridge) pay for an FMA on both the ADD
+    and MUL ports.
     """
     fc = kernel.flops
     rates = machine.flops_per_cycle.get(precision, {"ADD": 4, "MUL": 4})
-    adds = fc.add + fc.fma
-    muls = fc.mul + fc.fma + fc.div
+    fma_rate = float(rates.get("FMA", 0))
+    if fma_rate:
+        adds, muls, fmas = fc.add, fc.mul + fc.div, fc.fma
+    else:
+        adds, muls, fmas = fc.add + fc.fma, fc.mul + fc.fma + fc.div, 0
     total = fc.total
     if total == 0:
         return peak_performance(machine, precision)
     # cycles to issue one iteration's arithmetic, port-limited:
-    cyc = max(adds / float(rates.get("ADD", 4)), muls / float(rates.get("MUL", 4)))
+    cyc = max(adds / float(rates.get("ADD", 4)),
+              muls / float(rates.get("MUL", 4)),
+              fmas / fma_rate if fma_rate else 0.0)
     if cyc == 0:
         return peak_performance(machine, precision)
     return total / cyc
@@ -111,4 +111,15 @@ def analyze_tpu(machine: Machine, mxu_flops: float, vpu_flops: float,
         t_ol=max(t_mxu, t_vpu),
         t_nol=t_load + t_store,
         port_cycles={"MXU": t_mxu, "VPU": t_vpu, "VLD": t_load, "VST": t_store},
-        flops_per_unit=mxu_flops + vpu_flops)
+        flops_per_unit=mxu_flops + vpu_flops, model="simple")
+
+
+@register_incore
+class SimpleInCoreModel(InCoreModel):
+    """The machine-file heuristic preserved as the registered default."""
+
+    name = "simple"
+
+    def analyze(self, kernel: LoopKernel, machine: Machine,
+                precision: str = "DP") -> InCoreResult:
+        return analyze_x86(kernel, machine, precision=precision)

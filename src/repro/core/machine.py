@@ -25,6 +25,32 @@ _MACHINE_DIR = pathlib.Path(__file__).resolve().parent.parent / "configs" / "mac
 
 INF = float("inf")
 
+#: Op kinds a ``ports:`` instruction table may declare — the single source
+#: of truth shared with the op-stream IR (:mod:`repro.core.incore.ir`).
+PORT_OP_KINDS = ("ADD", "MUL", "DIV", "FMA", "LOAD", "STORE", "MXU", "VPU")
+
+# accepted YAML keys; anything else raises (a misspelled key silently
+# ignored would silently mis-model the machine)
+_TOP_LEVEL_KEYS = frozenset({
+    "model name", "arch", "clock", "cores per socket", "cacheline size",
+    "FLOPs per cycle", "load bytes per cycle", "store bytes per cycle",
+    "overlapping ports", "non-overlapping ports", "ports",
+    "memory hierarchy", "main memory bandwidth", "benchmarks",
+    "peak flops", "hbm bandwidth", "vmem size", "ici link bandwidth",
+    "ici links", "chips", "extra",
+})
+_PORT_TABLE_KEYS = frozenset({"names", "non-overlapping", "instructions"})
+_PORT_ENTRY_KEYS = frozenset({"ports", "rate", "cycles per op",
+                              "bytes per cycle", "latency"})
+
+
+def _check_keys(d: dict, accepted: frozenset, where: str) -> None:
+    unknown = sorted(str(k) for k in d if k not in accepted)
+    if unknown:
+        raise ValueError(
+            f"unknown {where} key(s) {unknown}; accepted: "
+            f"{sorted(accepted)}")
+
 
 def _parse_size(v: Any) -> float:
     """Parse '32 kB' / '25.00 MB' / ints into bytes."""
@@ -73,6 +99,78 @@ class CacheLevel:
 
 
 @dataclasses.dataclass(frozen=True)
+class PortEntry:
+    """How one op kind schedules: eligible ports plus either a reciprocal
+    throughput per scalar op (``cycles_per_op``, from the YAML ``rate`` or
+    ``cycles per op``) or a per-port byte bandwidth (``bytes per cycle``,
+    for width-scaled memory ops), and the instruction latency used by the
+    dependence-chain bound."""
+    kind: str
+    ports: tuple[str, ...]
+    cycles_per_op: float | None = None
+    bytes_per_cycle: float | None = None
+    latency: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PortTable:
+    """The machine file's ``ports:`` section (the OSACA-style abstraction
+    of the performance-relevant scheduler properties): declared port
+    names, the subset forming the ECM's non-overlapping class (the load
+    ports), and one :class:`PortEntry` per op kind."""
+    names: tuple[str, ...]
+    non_overlapping: tuple[str, ...]
+    entries: dict[str, PortEntry]
+
+
+def _parse_ports(d: dict) -> PortTable:
+    _check_keys(d, _PORT_TABLE_KEYS, "ports-table")
+    names = tuple(str(p) for p in d.get("names", []))
+    if not names:
+        raise ValueError("ports table declares no 'names'")
+    nonov = tuple(str(p) for p in d.get("non-overlapping", []))
+    bad = sorted(set(nonov) - set(names))
+    if bad:
+        raise ValueError(
+            f"ports table 'non-overlapping' names undeclared port(s) "
+            f"{bad}; declared: {list(names)}")
+    entries: dict[str, PortEntry] = {}
+    for kind, ed in (d.get("instructions") or {}).items():
+        kind = str(kind)
+        if kind not in PORT_OP_KINDS:
+            raise ValueError(
+                f"unknown ports instruction kind {kind!r}; accepted: "
+                f"{list(PORT_OP_KINDS)}")
+        _check_keys(ed, _PORT_ENTRY_KEYS, f"ports instruction {kind!r}")
+        eports = tuple(str(p) for p in ed.get("ports", []))
+        bad = sorted(set(eports) - set(names))
+        if not eports or bad:
+            raise ValueError(
+                f"ports instruction {kind!r} must name declared port(s); "
+                f"got {list(eports)}, declared: {list(names)}")
+        rate, cpo = ed.get("rate"), ed.get("cycles per op")
+        bpc = ed.get("bytes per cycle")
+        given = [k for k, v in (("rate", rate), ("cycles per op", cpo),
+                                ("bytes per cycle", bpc)) if v is not None]
+        if len(given) != 1:
+            raise ValueError(
+                f"ports instruction {kind!r} needs exactly one throughput "
+                f"form out of ['rate', 'cycles per op', 'bytes per cycle']"
+                + (f"; got {given}" if given else ""))
+        if float(ed[given[0]]) <= 0:
+            raise ValueError(
+                f"ports instruction {kind!r}: {given[0]!r} must be "
+                f"positive, got {ed[given[0]]!r}")
+        cycles = (1.0 / float(rate)) if rate is not None else \
+            (float(cpo) if cpo is not None else None)
+        entries[kind] = PortEntry(
+            kind=kind, ports=eports, cycles_per_op=cycles,
+            bytes_per_cycle=float(bpc) if bpc is not None else None,
+            latency=float(ed.get("latency", 0.0)))
+    return PortTable(names=names, non_overlapping=nonov, entries=entries)
+
+
+@dataclasses.dataclass(frozen=True)
 class BenchmarkKernel:
     name: str
     flops_per_iteration: int
@@ -108,6 +206,8 @@ class Machine:
     # --- memory hierarchy, closest (L1/VMEM) first ---
     levels: tuple[CacheLevel, ...]
     main_memory_bandwidth: float   # saturated, bytes/s (ECM memory term)
+    # scheduler port table (the "ports" in-core model; None = not declared)
+    ports: PortTable | None = None
     # --- streaming benchmarks (Roofline inputs) ---
     kernels: dict[str, BenchmarkKernel] = dataclasses.field(default_factory=dict)
     results: tuple[BenchmarkResult, ...] = ()
@@ -158,6 +258,7 @@ class Machine:
     # ------------------------------------------------------------------
     @classmethod
     def from_dict(cls, d: dict) -> "Machine":
+        _check_keys(d, _TOP_LEVEL_KEYS, "machine-description")
         levels = []
         for lv in d.get("memory hierarchy", []):
             cpg = lv.get("cache per group", {})
@@ -211,6 +312,7 @@ class Machine:
             store_bytes_per_cycle=float(d.get("store bytes per cycle", 16)),
             overlapping_ports=tuple(str(p) for p in d.get("overlapping ports", [])),
             non_overlapping_ports=tuple(str(p) for p in d.get("non-overlapping ports", [])),
+            ports=_parse_ports(d["ports"]) if d.get("ports") else None,
             levels=tuple(levels),
             main_memory_bandwidth=_parse_bw(d.get("main memory bandwidth", 0)),
             kernels=kernels,

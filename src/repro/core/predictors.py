@@ -127,6 +127,14 @@ class CacheSimulationPredictor(CachePredictor):
             params=params)
 
 
+def predictor_tag(predictor: str, params: dict) -> str:
+    """Compact provenance tag for reports, e.g. ``LC`` or ``SIM:vector`` —
+    the one definition behind ``ECMResult``/``RooflineResult``
+    ``.predictor_tag``."""
+    backend = params.get("backend")
+    return predictor + (f":{backend}" if backend else "")
+
+
 def resolve_predictor(name: str) -> CachePredictor:
     try:
         return PREDICTOR_REGISTRY[name.upper()]

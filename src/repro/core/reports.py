@@ -18,16 +18,36 @@ def _gf(x: float) -> str:
     return f"{x / 1e9:.2f} GFLOP/s"
 
 
+def _incore_lines(incore: dict) -> list[str]:
+    """Port-scheduler breakdown lines (the "ports" in-core model): per-port
+    occupation plus which bound binds.  Empty for the "simple" model,
+    whose per-kind times already appear in T_OL/T_nOL."""
+    occ = (incore or {}).get("port_occupation")
+    if not occ:
+        return []
+    cells = " | ".join(f"{p} {c:.1f}" for p, c in sorted(occ.items()))
+    lines = [f"in-core port occupation (cy/unit): {cells}"]
+    lines.append(
+        f"in-core bound: {incore.get('bound', 'throughput')}"
+        + (f" (loop-carried latency {incore['t_latency']:.1f} cy/unit)"
+           if incore.get("t_latency") else ""))
+    return lines
+
+
 def ecm_report(res: ECMResult) -> str:
     lines = ["-" * 26 + " ECM " + "-" * 26,
              res.notation(),
              res.notation_cumulative(),
              f"saturating at {res.saturation_cores} cores"]
+    lines += _incore_lines(res.incore)
     return "\n".join(lines)
 
 
 def roofline_report(res: RooflineResult, cores: int = 1) -> str:
-    lines = ["-" * 21 + " RooflineIACA " + "-" * 21, "Bottlenecks:",
+    lines = ["-" * 21 + " RooflineIACA " + "-" * 21]
+    if res.incore_model:
+        lines.append(f"[{res.predictor_tag}] [{res.incore_model}]")
+    lines += ["Bottlenecks:",
              "  level | a. intensity |   performance   |  bandwidth  | bw kernel"]
     lines.append(f"  CPU   |              | {_gf(res.core_performance):>15} |"
                  f"             |")
@@ -43,6 +63,7 @@ def roofline_report(res: RooflineResult, cores: int = 1) -> str:
     if res.levels:
         lines.append(f"Arithmetic Intensity: "
                      f"{res.levels[-1].arithmetic_intensity:.2f} FLOP/B")
+    lines += _incore_lines(res.incore)
     return "\n".join(lines)
 
 

@@ -19,11 +19,11 @@ import math
 
 import numpy as np
 
-from . import incore
+from . import incore as _incore
 from .incore import InCoreResult
 from .kernel_ir import LoopKernel
 from .machine import Machine
-from .predictors import VolumePrediction, predict_volumes
+from .predictors import VolumePrediction, predict_volumes, predictor_tag
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +49,16 @@ class RooflineResult:
     # resolved options, so serialized reports are self-describing
     predictor: str = "LC"
     predictor_params: dict = dataclasses.field(default_factory=dict)
+    # in-core provenance: the registered InCoreModel behind t_core (IACA
+    # variant only; the classic variant's P_max uses the flops/cy table
+    # and leaves these empty) plus its full scheduler breakdown
+    incore_model: str = ""
+    incore: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def predictor_tag(self) -> str:
+        """Compact provenance tag, e.g. ``LC`` or ``SIM:vector``."""
+        return predictor_tag(self.predictor, self.predictor_params)
 
     @property
     def bottleneck(self) -> str:
@@ -82,6 +92,8 @@ class RooflineResult:
             "clock_hz": self.clock_hz,
             "predictor": self.predictor,
             "predictor_params": dict(self.predictor_params),
+            "incore_model": self.incore_model,
+            "incore": dict(self.incore),
             # derived, for consumers that only read the dict:
             "bottleneck": self.bottleneck,
             "performance": self.performance,
@@ -98,12 +110,15 @@ class RooflineResult:
                    variant=("IACA" if d.get("model") == "roofline-iaca"
                             else "classic"),
                    predictor=str(d.get("predictor", "LC")),
-                   predictor_params=dict(d.get("predictor_params", {})))
+                   predictor_params=dict(d.get("predictor_params", {})),
+                   incore_model=str(d.get("incore_model", "")),
+                   incore=dict(d.get("incore", {})))
 
 
 def terms_arrays(kernel: LoopKernel, machine: Machine, traffic: dict,
                  cores: int = 1, variant: str = "IACA",
-                 incore_result: InCoreResult | None = None) -> dict:
+                 incore_result: InCoreResult | None = None,
+                 incore: str = "simple") -> dict:
     """Vectorized closed-form Roofline over a sweep grid.
 
     ``traffic`` maps level name to a numpy array of β_k (bytes per inner
@@ -117,12 +132,12 @@ def terms_arrays(kernel: LoopKernel, machine: Machine, traffic: dict,
     unit = kernel.iterations_per_cacheline(machine.cacheline_bytes)
     flops_unit = kernel.flops.total * unit
     if variant.upper() == "IACA":
-        ic = incore_result or incore.analyze_x86(kernel, machine)
+        ic = incore_result or _incore.analyze(kernel, machine, model=incore)
         t_core = ic.t_core
         core_perf = (flops_unit / t_core * machine.clock_hz
                      if t_core > 0 else math.inf)
     else:
-        pmax = incore.applicable_peak(kernel, machine)
+        pmax = _incore.applicable_peak(kernel, machine)
         core_perf = pmax * machine.clock_hz * cores
         t_core = flops_unit / pmax if pmax else 0.0
 
@@ -184,8 +199,11 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
           variant: str = "IACA", cores: int = 1,
           sim_kwargs: dict | None = None,
           volumes: VolumePrediction | None = None,
-          incore_result: InCoreResult | None = None) -> RooflineResult:
-    """Roofline model; ``predictor`` names a registered cache predictor.
+          incore_result: InCoreResult | None = None,
+          incore: str = "simple") -> RooflineResult:
+    """Roofline model; ``predictor`` names a registered cache predictor
+    and ``incore`` a registered in-core model (IACA variant only; the
+    classic variant's compute bound is the flops/cy table's P_max).
 
     Like :func:`repro.core.ecm.model`, precomputed ``volumes`` /
     ``incore_result`` (from an AnalysisSession) skip the corresponding
@@ -195,13 +213,14 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
     flops_unit = kernel.flops.total * unit
 
     # ---- in-core bound -------------------------------------------------
+    ic = None
     if variant.upper() == "IACA":
-        ic = incore_result or incore.analyze_x86(kernel, machine)
+        ic = incore_result or _incore.analyze(kernel, machine, model=incore)
         t_core = ic.t_core
         core_perf = (flops_unit / t_core * machine.clock_hz
                      if t_core > 0 else math.inf)
     else:
-        pmax = incore.applicable_peak(kernel, machine)     # flop/cy
+        pmax = _incore.applicable_peak(kernel, machine)     # flop/cy
         core_perf = pmax * machine.clock_hz * cores
         t_core = flops_unit / pmax if pmax else 0.0
 
@@ -247,4 +266,6 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
                           variant=("IACA" if variant.upper() == "IACA"
                                    else "classic"),
                           predictor=volumes.predictor,
-                          predictor_params=dict(volumes.params))
+                          predictor_params=dict(volumes.params),
+                          incore_model=ic.model if ic is not None else "",
+                          incore=ic.to_dict() if ic is not None else {})

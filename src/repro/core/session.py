@@ -3,12 +3,15 @@
 Blocking sweeps, multi-model reports, and any high-traffic analysis service
 evaluate the same kernel at many parameter points and under several models.
 The expensive pieces — sympy-heavy layer conditions, the cache simulator,
-the in-core port model — depend only on ``(kernel, machine, predictor,
+the in-core models — depend only on ``(kernel, machine, predictor,
 opts)``, so an :class:`AnalysisSession` caches all three tiers:
 
-  1. in-core analysis        (keyed by kernel)
+  1. in-core analysis        (keyed by kernel *structure* × in-core model:
+                              bound constants never enter, so one entry
+                              serves every point of a sweep)
   2. predictor volumes       (keyed by kernel × predictor × cores × opts)
-  3. full model results      (keyed by model × kernel × predictor × opts)
+  3. full model results      (keyed by model × kernel × predictor ×
+                              in-core model × opts)
 
 For the SIM predictor the option key is *normalized* — defaults filled
 in and ``backend='auto'`` resolved against the machine — so equivalent
@@ -34,11 +37,11 @@ from __future__ import annotations
 
 import dataclasses
 
-from . import incore
+from . import incore as _incore
 from .cachesim import normalize_sim_kwargs
 from .compiled import CompiledSweepPlan, CompileError, compile_plan
 from .identity import freeze as _freeze
-from .identity import kernel_key, source_key  # noqa: F401  (re-export)
+from .identity import incore_key, kernel_key, source_key  # noqa: F401
 from .incore import InCoreResult
 from .kernel_ir import LoopKernel
 from .machine import Machine
@@ -72,11 +75,13 @@ class AnalysisSession:
     """Shared, memoized predictor/in-core/model state for one machine."""
 
     def __init__(self, machine: Machine, predictor: str = "LC",
-                 cores: int = 1, sim_kwargs: dict | None = None):
+                 cores: int = 1, sim_kwargs: dict | None = None,
+                 incore: str = "simple"):
         self.machine = machine
         self.predictor = predictor
         self.cores = cores
         self.sim_kwargs = dict(sim_kwargs or {})
+        self.incore_model = incore
         self.stats = SessionStats()
         self._incore: dict[tuple, InCoreResult] = {}
         self._volumes: dict[tuple, VolumePrediction] = {}
@@ -97,12 +102,14 @@ class AnalysisSession:
                 self.sim_kwargs if sim_kwargs is None else sim_kwargs)
 
     def _loop_key(self, model_name: str, kernel: LoopKernel, predictor: str,
-                  cores: int, sim_kwargs: dict, opts: dict) -> tuple:
+                  cores: int, sim_kwargs: dict, incore: str,
+                  opts: dict) -> tuple:
         """Result-cache key for a loop model run (shared by :meth:`analyze`
         and the compiled-sweep broadcast, which prefills the same tier)."""
         return (model_name, kernel_key(kernel), self.machine.name,
                 predictor.upper(), cores,
-                self._sim_key(predictor, sim_kwargs), _freeze(opts))
+                self._sim_key(predictor, sim_kwargs), incore.lower(),
+                _freeze(opts))
 
     def _sim_key(self, predictor: str, sim_kwargs: dict) -> tuple:
         """Cache-key fragment for the simulation options.
@@ -117,15 +124,23 @@ class AnalysisSession:
         return _freeze(normalize_sim_kwargs(sim_kwargs, self.machine))
 
     # ------------------------------------------------------------------
-    def incore(self, kernel: LoopKernel) -> InCoreResult:
-        """Memoized in-core port-model analysis (paper §2.5)."""
-        key = (kernel_key(kernel), self.machine.name)
+    def incore(self, kernel: LoopKernel,
+               model: str | None = None) -> InCoreResult:
+        """Memoized in-core analysis (paper §2.5) under the named
+        registered :class:`~repro.core.incore.InCoreModel`.
+
+        Keyed by kernel *structure* (:func:`~repro.core.identity
+        .incore_key`): in-core never reads bound constants, so every
+        point of a sweep — compiled or per-point — shares one entry.
+        """
+        model = self.incore_model if model is None else model
+        key = (incore_key(kernel), self.machine.name, model.lower())
         hit = self._incore.get(key)
         if hit is not None:
             self.stats.incore_hits += 1
             return hit
         self.stats.incore_misses += 1
-        res = incore.analyze_x86(kernel, self.machine)
+        res = _incore.analyze(kernel, self.machine, model=model)
         self._incore[key] = res
         return res
 
@@ -149,14 +164,17 @@ class AnalysisSession:
 
     def analyze(self, kernel, model: str = "ecm",
                 predictor: str | None = None, cores: int | None = None,
-                sim_kwargs: dict | None = None, **opts) -> Result:
+                sim_kwargs: dict | None = None,
+                incore: str | None = None, **opts) -> Result:
         """Memoized full model run, routed through :data:`MODEL_REGISTRY`.
 
         ``kernel`` is any frontend output.  For loop models, a miss feeds
-        the model the session's memoized volumes and in-core result, so
-        several models over one kernel share both; non-loop models (e.g.
-        ``hlo-roofline``) skip the predictor tiers — the predictor switch
-        does not apply to them — but still memoize full results.
+        the model the session's memoized volumes and in-core result
+        (``incore`` names the registered in-core model, defaulting to the
+        session's), so several models over one kernel share both;
+        non-loop models (e.g. ``hlo-roofline``) skip the predictor and
+        in-core tiers — those switches do not apply to them — but still
+        memoize full results.
         """
         m = resolve_model(model)
         if m.input_kind != "loop":
@@ -185,15 +203,16 @@ class AnalysisSession:
                 f"{loop_models} or a loop frontend (c/builder/trace)")
         predictor, cores, sim_kwargs = self._defaults(predictor, cores,
                                                       sim_kwargs)
+        incore = self.incore_model if incore is None else incore
         key = self._loop_key(m.name, kernel, predictor, cores, sim_kwargs,
-                             opts)
+                             incore, opts)
         hit = self._results.get(key)
         if hit is not None:
             self.stats.result_hits += 1
             return hit
         self.stats.result_misses += 1
         vols = self.volumes(kernel, predictor, cores, sim_kwargs)
-        ic = self.incore(kernel)
+        ic = self.incore(kernel, incore)
         res = m.analyze(kernel, self.machine, predictor=predictor,
                         cores=cores, sim_kwargs=sim_kwargs, volumes=vols,
                         incore_result=ic, **opts)
@@ -202,17 +221,23 @@ class AnalysisSession:
 
     # ------------------------------------------------------------------
     def sweep_plan(self, kernel: LoopKernel, param: str,
-                   cores: int | None = None) -> CompiledSweepPlan:
+                   cores: int | None = None,
+                   incore: str | None = None) -> CompiledSweepPlan:
         """The compiled sweep plan for ``kernel``'s structure with ``param``
-        unbound (lowered once, then cached alongside the other tiers)."""
+        unbound (lowered once, then cached alongside the other tiers).
+        The plan's in-core result comes through the session's memoized
+        tier — in-core is structure-only, so one analysis serves the
+        entire grid."""
         cores = self.cores if cores is None else cores
+        incore = self.incore_model if incore is None else incore
         template = dataclasses.replace(
             kernel, constants={k: v for k, v in kernel.constants.items()
                                if k != param})
-        key = (kernel_key(template), str(param), cores)
+        key = (kernel_key(template), str(param), cores, incore.lower())
         plan = self._plans.get(key)
         if plan is None:
-            plan = compile_plan(kernel, self.machine, param, cores=cores)
+            plan = compile_plan(kernel, self.machine, param, cores=cores,
+                                incore_result=self.incore(kernel, incore))
             self._plans[key] = plan
             self.stats.plan_compiles += 1
         return plan
@@ -239,6 +264,7 @@ class AnalysisSession:
     def sweep(self, kernel: LoopKernel, param: str, values,
               models=("ecm",), predictor: str | None = None,
               cores: int | None = None, sim_kwargs: dict | None = None,
+              incore: str | None = None,
               compiled: bool | str = "auto", **opts) -> dict[str, list[Result]]:
         """Evaluate ``models`` at every ``param`` value (the batch API).
 
@@ -261,6 +287,7 @@ class AnalysisSession:
                 f"LoopKernel sources carry (got {type(kernel).__name__})")
         predictor, cores, sim_kwargs = self._defaults(predictor, cores,
                                                       sim_kwargs)
+        incore = self.incore_model if incore is None else incore
         values = list(values)
         if compiled not in (True, False, "auto"):
             raise ValueError(f"compiled must be True/False/'auto', "
@@ -270,7 +297,7 @@ class AnalysisSession:
             if blocker is None and (compiled is True or len(values) >= 4):
                 return self._sweep_compiled(kernel, param, values, models,
                                             predictor, cores, sim_kwargs,
-                                            opts)
+                                            incore, opts)
             if compiled is True:
                 raise CompileError(f"compiled sweep requested but {blocker}")
         out: dict[str, list[Result]] = {str(m): [] for m in models}
@@ -279,11 +306,13 @@ class AnalysisSession:
             for m in models:
                 out[str(m)].append(
                     self.analyze(bound, m, predictor=predictor, cores=cores,
-                                 sim_kwargs=sim_kwargs, **opts))
+                                 sim_kwargs=sim_kwargs, incore=incore,
+                                 **opts))
         return out
 
     def _sweep_compiled(self, kernel, param, values, models, predictor,
-                        cores, sim_kwargs, opts) -> dict[str, list[Result]]:
+                        cores, sim_kwargs, incore,
+                        opts) -> dict[str, list[Result]]:
         """Batched sweep over a compiled plan (DESIGN.md §8).
 
         The plan groups grid values into LC regimes in one vectorized
@@ -296,7 +325,7 @@ class AnalysisSession:
         per-point evaluation, so results are always identical to
         ``compiled=False``.
         """
-        plan = self.sweep_plan(kernel, param, cores)
+        plan = self.sweep_plan(kernel, param, cores, incore)
         ints = [int(v) for v in values]
         bound = {v: kernel.bind(**{param: v}) for v in set(ints)}
         keys: dict[tuple, tuple] = {}
@@ -307,7 +336,7 @@ class AnalysisSession:
             rname = resolve_model(m).name
             for v in bound:
                 key = self._loop_key(rname, bound[v], predictor, cores,
-                                     sim_kwargs, opts)
+                                     sim_kwargs, incore, opts)
                 keys[(mname, v)] = key
                 hit = self._results.get(key)
                 if hit is not None:
@@ -318,7 +347,8 @@ class AnalysisSession:
 
         def _point(v, m):
             return self.analyze(bound[v], m, predictor=predictor,
-                                cores=cores, sim_kwargs=sim_kwargs, **opts)
+                                cores=cores, sim_kwargs=sim_kwargs,
+                                incore=incore, **opts)
 
         if missing:
             groups, fallback = plan.regimes(sorted(missing))

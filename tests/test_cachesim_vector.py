@@ -249,13 +249,13 @@ class TestProvenance:
                          constants={"M": 30, "N": 50})
         e_lc = ecm.model(k, ivy, predictor="LC")
         assert e_lc.predictor == "LC" and e_lc.predictor_params == {}
-        assert e_lc.notation().endswith("[LC]")
+        assert e_lc.notation().endswith("[LC] [simple]")
         e_sim = ecm.model(k, ivy, predictor="SIM",
                           sim_kwargs={"warmup_rows": 3, "measure_rows": 2})
         assert e_sim.predictor == "SIM"
         assert e_sim.predictor_params["backend"] == "vector"
         assert e_sim.predictor_params["warmup_rows"] == 3
-        assert e_sim.notation().endswith("[SIM:vector]")
+        assert e_sim.notation().endswith("[SIM:vector] [simple]")
 
     def test_json_round_trip_preserves_provenance(self, ivy):
         k = parse_kernel((STENCILS / "stencil_3d7pt.c").read_text(),

@@ -146,7 +146,7 @@ def test_lc_json_carries_predictor(capsys):
     assert rc == 0
     d = json.loads(out)[0]
     assert d["predictor"] == "LC" and d["predictor_params"] == {}
-    assert d["notation"].endswith("[LC]")
+    assert d["notation"].endswith("[LC] [simple]")
 
 
 def test_sim_backend_header_in_text_report(capsys):

@@ -1,0 +1,494 @@
+"""The in-core subsystem (DESIGN.md §4, docs/incore.md): registry dispatch,
+op-stream lowering, the vectorized port scheduler, machine-file schema
+validation, frontend parity, and the end-to-end ``incore=`` plumbing
+through models, sessions, compiled sweeps, and the CLI."""
+import json
+import pathlib
+
+import pytest
+
+from repro.core import incore, load_machine, parse_kernel
+from repro.core.incore import (INCORE_REGISTRY, InCoreResult, lower_kernel,
+                               naive_schedule, resolve_incore, schedule,
+                               synthetic_stream)
+from repro.core.kernel_ir import FlopCount, make_stencil
+from repro.core.machine import Machine
+from repro.core.session import AnalysisSession
+
+STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
+    "src" / "repro" / "configs" / "stencils"
+
+PAPER_KERNELS = [
+    ("stencil_3d_long_range.c", {"M": 130, "N": 1015}, 52.0, 54.0),
+    ("stencil_3d7pt.c", {"M": 500, "N": 1000}, 14.0, 14.0),
+    ("stencil_2d5pt.c", {"M": 4000, "N": 4000}, 6.0, 8.0),
+]
+
+
+@pytest.fixture(scope="module")
+def ivy():
+    return load_machine("IVY")
+
+
+def _kernel(fname: str, consts: dict):
+    return parse_kernel((STENCILS / fname).read_text(), constants=consts)
+
+
+def _carried_kernel():
+    """a[i] = a[i-1]*c + b[i] — loop-carried at distance 1."""
+    return make_stencil(
+        "carried", {"a": ("N",), "b": ("N",)}, [("i", 1, "N")],
+        reads=[("a", "i-1"), ("b", "i")], writes=[("a", "i")],
+        flops=FlopCount(add=1, mul=1), constants={"N": 4000})
+
+
+# ----------------------------------------------------------------------
+class TestRegistry:
+    def test_contents(self):
+        assert {"simple", "ports"} <= set(INCORE_REGISTRY)
+
+    def test_case_insensitive(self):
+        assert resolve_incore("Simple") is INCORE_REGISTRY["simple"]
+        assert resolve_incore("PORTS") is INCORE_REGISTRY["ports"]
+
+    def test_unknown_lists_available(self):
+        with pytest.raises(ValueError, match=r"unknown in-core model "
+                                             r"'osaca'.*ports.*simple"):
+            resolve_incore("osaca")
+
+    def test_ports_without_table_errors(self, ivy):
+        bare = Machine.from_dict({"model name": "no-ports"})
+        with pytest.raises(ValueError, match=r"no 'ports:' table"):
+            incore.analyze(_carried_kernel(), bare, model="ports")
+
+
+# ----------------------------------------------------------------------
+class TestPaperPins:
+    """Acceptance: ``incore='ports'`` on ivybridge_ep.yaml reproduces the
+    machine-file T_OL/T_nOL classes for the three paper stencils."""
+
+    @pytest.mark.parametrize("fname,consts,t_ol,t_nol", PAPER_KERNELS)
+    def test_ports_reproduces_machine_file_classes(self, ivy, fname, consts,
+                                                   t_ol, t_nol):
+        k = _kernel(fname, consts)
+        p = incore.analyze(k, ivy, model="ports")
+        s = incore.analyze(k, ivy, model="simple")
+        assert p.t_ol == pytest.approx(t_ol)
+        assert p.t_nol == pytest.approx(t_nol)
+        assert s.t_ol == pytest.approx(p.t_ol)
+        assert s.t_nol == pytest.approx(p.t_nol)
+        assert p.model == "ports" and s.model == "simple"
+        assert p.bound == "throughput"
+
+    def test_longrange_port_occupation(self, ivy):
+        k = _kernel(*PAPER_KERNELS[0][:2])
+        p = incore.analyze(k, ivy, model="ports")
+        # 26 adds on P1, 15 muls on P0, 27 loads split over P2/P3
+        assert p.port_occupation["P1"] == pytest.approx(52.0)
+        assert p.port_occupation["P0"] == pytest.approx(30.0)
+        assert p.port_occupation["P2"] == pytest.approx(54.0)
+        assert p.port_occupation["P3"] == pytest.approx(54.0)
+
+
+# ----------------------------------------------------------------------
+class TestOpStreamIR:
+    def test_lowering_counts(self, ivy):
+        k = _kernel("stencil_3d_long_range.c", {"M": 130, "N": 1015})
+        st = lower_kernel(k)
+        assert st.counts() == {"ADD": 26, "MUL": 15, "LOAD": 27, "STORE": 1}
+        assert st.carried == ()          # U read/write at the same point
+
+    def test_edges_topological(self):
+        st = lower_kernel(_kernel("stencil_3d7pt.c", {"M": 30, "N": 40}))
+        assert (st.levels[st.edge_src] < st.levels[st.edge_dst]).all()
+
+    def test_carried_dependence_detected(self):
+        st = lower_kernel(_carried_kernel())
+        assert [(c.array, c.distance) for c in st.carried] == [("a", 1)]
+
+    def test_scalar_accumulator_carried(self, ivy):
+        # s[0] = s[0] + a[i]*b[i]: write stride 0 in the inner var means
+        # every iteration touches the same element — carried at distance 1
+        k = make_stencil(
+            "dot", {"s": ("1",), "a": ("N",), "b": ("N",)},
+            [("i", 0, "N")],
+            reads=[("s", "0"), ("a", "i"), ("b", "i")],
+            writes=[("s", "0")],
+            flops=FlopCount(add=1, mul=1), constants={"N": 4000})
+        st = lower_kernel(k)
+        assert [(c.array, c.distance) for c in st.carried] == [("s", 1)]
+        res = incore.analyze(k, ivy, model="ports")
+        assert res.bound == "latency"
+        assert res.t_latency == pytest.approx(res.critical_path
+                                              * res.unit_iterations)
+
+    def test_structure_only(self):
+        k = _carried_kernel()
+        assert lower_kernel(k).key() == lower_kernel(k.bind(N=17)).key()
+
+    def test_synthetic_matches_lowered_shape(self):
+        st = synthetic_stream(4, n_iters=3)
+        assert st.counts() == {"LOAD": 24, "MUL": 12, "ADD": 9, "STORE": 3}
+        assert (st.levels[st.edge_src] < st.levels[st.edge_dst]).all()
+
+
+# ----------------------------------------------------------------------
+class TestScheduler:
+    def test_vectorized_matches_naive(self, ivy):
+        for st in (lower_kernel(_kernel("stencil_3d_long_range.c",
+                                        {"M": 130, "N": 1015})),
+                   lower_kernel(_carried_kernel()),
+                   synthetic_stream(13, n_iters=7)):
+            a = schedule(st, ivy.ports)
+            b = naive_schedule(st, ivy.ports)
+            assert a["critical_path"] == pytest.approx(b["critical_path"])
+            assert set(a["occupation"]) == set(b["occupation"])
+            for p in a["occupation"]:
+                assert a["occupation"][p] == pytest.approx(
+                    b["occupation"][p])
+            for kind in set(a["kind_cycles"]) | set(b["kind_cycles"]):
+                assert a["kind_cycles"][kind] == pytest.approx(
+                    b["kind_cycles"][kind])
+
+    def test_missing_entry_named(self, ivy):
+        import dataclasses
+        table = dataclasses.replace(
+            ivy.ports, entries={k: v for k, v in ivy.ports.entries.items()
+                                if k != "STORE"})
+        with pytest.raises(ValueError, match=r"no instruction entry.*STORE"):
+            schedule(lower_kernel(_carried_kernel()), table)
+
+    def test_latency_binds_on_carried_chain(self, ivy):
+        res = incore.analyze(_carried_kernel(), ivy, model="ports")
+        # LOAD(4) -> MUL(5) -> ADD(3) -> STORE(4) = 16 cy per iteration at
+        # distance 1, far above the few-cycle throughput bound
+        assert res.critical_path == pytest.approx(16.0)
+        assert res.t_latency == pytest.approx(16.0 * res.unit_iterations)
+        assert res.bound == "latency"
+        assert res.t_core == pytest.approx(res.t_latency)
+
+    def test_ecm_honors_latency_bound(self, ivy):
+        # T_ECM must not undercut the in-core latency bound it reports
+        from repro.core import ecm
+        k = _carried_kernel()
+        res = ecm.model(k, ivy, incore="ports")
+        assert res.t_incore_latency == pytest.approx(128.0)
+        assert res.t_ecm >= res.t_incore_latency
+        # per-point and compiled paths agree on the latency-bound kernel
+        sess = AnalysisSession(ivy)
+        a = sess.sweep(k, "N", [2000, 4000, 6000, 8000], incore="ports",
+                       compiled=True)
+        b = AnalysisSession(ivy).sweep(k, "N", [2000, 4000, 6000, 8000],
+                                       incore="ports", compiled=False)
+        for ra, rb in zip(a["ecm"], b["ecm"]):
+            assert ra.to_dict() == rb.to_dict()
+            assert ra.t_ecm == pytest.approx(128.0)
+
+    def test_result_round_trip(self, ivy):
+        res = incore.analyze(_carried_kernel(), ivy, model="ports")
+        rt = InCoreResult.from_dict(json.loads(json.dumps(res.to_dict())))
+        assert rt == res
+
+
+# ----------------------------------------------------------------------
+class TestFMA:
+    """Satellite: a declared FMA rate stops FMA uops double-counting
+    against both the ADD and MUL ports; behavior without one is kept."""
+
+    MACHINE = {
+        "model name": "fma-test",
+        "FLOPs per cycle": {"DP": {"ADD": 4, "MUL": 4, "FMA": 4,
+                                   "total": 16}},
+        "load bytes per cycle": 32, "store bytes per cycle": 16,
+        "ports": {
+            "names": ["P0", "P1", "P2", "P3", "P4"],
+            "non-overlapping": ["P2", "P3"],
+            "instructions": {
+                "ADD": {"ports": ["P1"], "rate": 4, "latency": 3},
+                "MUL": {"ports": ["P0"], "rate": 4, "latency": 5},
+                "FMA": {"ports": ["P0", "P1"], "rate": 4, "latency": 5},
+                "LOAD": {"ports": ["P2", "P3"], "bytes per cycle": 16,
+                         "latency": 4},
+                "STORE": {"ports": ["P4"], "bytes per cycle": 16,
+                          "latency": 4}}},
+    }
+
+    def _fma_kernel(self):
+        return make_stencil(
+            "fma", {"a": ("N",), "b": ("N",)}, [("i", 0, "N")],
+            reads=[("a", "i")], writes=[("b", "i")],
+            flops=FlopCount(fma=4), constants={"N": 4000})
+
+    def test_simple_uses_fma_port(self):
+        m = Machine.from_dict(self.MACHINE)
+        res = incore.analyze(self._fma_kernel(), m, model="simple")
+        # 4 FMA/it * 8 it / 4 per cy = 8 cy; ADD/MUL ports stay idle
+        assert res.port_cycles["FMA"] == pytest.approx(8.0)
+        assert res.port_cycles["ADD"] == 0.0
+        assert res.port_cycles["MUL"] == 0.0
+        assert res.t_ol == pytest.approx(8.0)
+
+    def test_simple_double_counts_without_fma_rate(self, ivy):
+        res = incore.analyze(self._fma_kernel(), ivy, model="simple")
+        # regression: no FMA rate -> one uop on each of ADD and MUL
+        assert res.port_cycles["ADD"] == pytest.approx(8.0)
+        assert res.port_cycles["MUL"] == pytest.approx(8.0)
+        assert res.port_cycles["FMA"] == 0.0
+
+    def test_ports_uses_fma_entry(self):
+        m = Machine.from_dict(self.MACHINE)
+        res = incore.analyze(self._fma_kernel(), m, model="ports")
+        # 4 FMA/it * 8 it at rate 4 over two eligible ports: 4 cy each
+        assert res.port_occupation["P0"] == pytest.approx(4.0)
+        assert res.port_occupation["P1"] == pytest.approx(4.0)
+        assert res.t_ol == pytest.approx(4.0)
+
+    def test_ports_double_counts_without_fma_entry(self, ivy):
+        res = incore.analyze(self._fma_kernel(), ivy, model="ports")
+        # IVY has no FMA entry: one uop on the ADD port + one on MUL
+        assert res.port_occupation["P1"] == pytest.approx(8.0)
+        assert res.port_occupation["P0"] == pytest.approx(8.0)
+
+    def test_applicable_peak_respects_fma_port(self):
+        m = Machine.from_dict(self.MACHINE)
+        k = self._fma_kernel()
+        # 4 FMAs = 8 flops in 1 cy on the FMA port -> 8 flops/cy
+        assert incore.applicable_peak(k, m) == pytest.approx(8.0)
+
+    def test_applicable_peak_double_counts_without_fma_rate(self, ivy):
+        k = self._fma_kernel()
+        # regression-pinned legacy behavior: 8 flops in 1 cy (both ports)
+        assert incore.applicable_peak(k, ivy) == pytest.approx(8.0)
+        # a mixed kernel shows the asymmetry: adds compete with the FMAs
+        k2 = make_stencil(
+            "fma-mixed", {"a": ("N",), "b": ("N",)}, [("i", 0, "N")],
+            reads=[("a", "i")], writes=[("b", "i")],
+            flops=FlopCount(add=4, fma=4), constants={"N": 4000})
+        m = Machine.from_dict(self.MACHINE)
+        # FMA port: 12 flops / max(4 adds + 0, 4 fmas)/4cy -> 12 flops/2cy
+        assert incore.applicable_peak(k2, m) == pytest.approx(12.0)
+        # without an FMA rate the adds and FMAs share the ADD port: 2 cy
+        assert incore.applicable_peak(k2, ivy) == pytest.approx(6.0)
+
+
+# ----------------------------------------------------------------------
+class TestMachineSchema:
+    """Satellite: unknown/misspelled YAML keys raise instead of being
+    silently ignored."""
+
+    def test_unknown_top_level_key(self):
+        with pytest.raises(ValueError, match=r"unknown machine-description "
+                                             r"key\(s\) \['model nam'\].*"
+                                             r"'model name'"):
+            Machine.from_dict({"model nam": "typo"})
+
+    def test_unknown_port_table_key(self):
+        with pytest.raises(ValueError, match=r"unknown ports-table key\(s\) "
+                                             r"\['instrs'\].*instructions"):
+            Machine.from_dict({"ports": {"names": ["P0"], "instrs": {}}})
+
+    def test_unknown_instruction_key(self):
+        with pytest.raises(ValueError,
+                           match=r"unknown ports instruction 'ADD' key\(s\) "
+                                 r"\['rat'\].*rate"):
+            Machine.from_dict({"ports": {
+                "names": ["P0"],
+                "instructions": {"ADD": {"ports": ["P0"], "rat": 4}}}})
+
+    def test_unknown_instruction_kind(self):
+        with pytest.raises(ValueError, match=r"unknown ports instruction "
+                                             r"kind 'SHUFFLE'.*ADD"):
+            Machine.from_dict({"ports": {
+                "names": ["P0"],
+                "instructions": {"SHUFFLE": {"ports": ["P0"], "rate": 1}}}})
+
+    def test_undeclared_port_named(self):
+        with pytest.raises(ValueError, match=r"ADD.*declared"):
+            Machine.from_dict({"ports": {
+                "names": ["P0"],
+                "instructions": {"ADD": {"ports": ["P9"], "rate": 4}}}})
+
+    def test_missing_throughput(self):
+        with pytest.raises(ValueError,
+                           match=r"ADD.*exactly one throughput form"):
+            Machine.from_dict({"ports": {
+                "names": ["P0"],
+                "instructions": {"ADD": {"ports": ["P0"], "latency": 3}}}})
+
+    def test_conflicting_throughput_forms(self):
+        # rate + bytes-per-cycle together would double-charge the
+        # vectorized scheduler while the naive reference charges one
+        with pytest.raises(ValueError,
+                           match=r"LOAD.*exactly one throughput form.*"
+                                 r"rate.*bytes per cycle"):
+            Machine.from_dict({"ports": {
+                "names": ["P0"],
+                "instructions": {"LOAD": {"ports": ["P0"], "rate": 2,
+                                          "bytes per cycle": 16}}}})
+
+    def test_nonpositive_throughput(self):
+        with pytest.raises(ValueError, match=r"ADD.*'rate' must be "
+                                             r"positive"):
+            Machine.from_dict({"ports": {
+                "names": ["P0"],
+                "instructions": {"ADD": {"ports": ["P0"], "rate": 0}}}})
+        with pytest.raises(ValueError, match=r"LOAD.*'bytes per cycle' "
+                                             r"must be positive"):
+            Machine.from_dict({"ports": {
+                "names": ["P0"],
+                "instructions": {"LOAD": {"ports": ["P0"],
+                                          "bytes per cycle": 0}}}})
+
+    def test_bundled_files_validate(self):
+        for name in ("IVY", "IVY122", "V5E"):
+            m = load_machine(name)
+            assert m.ports is not None
+            assert set(m.ports.non_overlapping) <= set(m.ports.names)
+
+
+# ----------------------------------------------------------------------
+class TestFrontendParity:
+    """Satellite: C-parsed and traced variants lower to the same op stream
+    and produce identical InCoreResults under both registered models."""
+
+    CASES = [
+        ("stencil_3d7pt.c", "trace:stencil3d7pt", "3d-7pt",
+         {"M": 130, "N": 100}),
+        ("stencil_3d_long_range.c", "trace:longrange3d", "3d-long-range",
+         {"M": 130, "N": 1015}),
+    ]
+
+    @pytest.mark.parametrize("cfile,tref,name,consts", CASES)
+    def test_same_op_stream_and_results(self, ivy, cfile, tref, name,
+                                        consts):
+        from repro.core import load_kernel
+        kc = parse_kernel((STENCILS / cfile).read_text(), name=name,
+                          constants=consts)
+        kt = load_kernel(tref, name=name, constants=consts)
+        assert lower_kernel(kc).key() == lower_kernel(kt).key()
+        for model in ("simple", "ports"):
+            rc = incore.analyze(kc, ivy, model=model)
+            rt = incore.analyze(kt, ivy, model=model)
+            assert rc == rt
+            assert rc.to_dict() == rt.to_dict()
+
+
+# ----------------------------------------------------------------------
+class TestEndToEnd:
+    def test_ecm_roofline_round_trip_incore_fields(self, ivy):
+        from repro.core import reports
+        k = _kernel("stencil_3d_long_range.c", {"M": 130, "N": 1015})
+        sess = AnalysisSession(ivy)
+        for inc in ("simple", "ports"):
+            e = sess.analyze(k, "ecm", incore=inc)
+            r = sess.analyze(k, "roofline-iaca", incore=inc)
+            assert e.incore_model == inc and r.incore_model == inc
+            assert e.to_dict()["incore"]["model"] == inc
+            for res in (e, r):
+                rt = reports.from_json(reports.to_json(res))
+                assert rt.to_dict() == res.to_dict()
+            assert f"[{inc}]" in e.notation()
+            assert reports.json_report(e) == reports.ecm_report(e)
+
+    def test_ecm_terms_identical_across_incore_models_on_ivy(self, ivy):
+        # the IVY ports table reproduces the machine-file classes, so the
+        # whole ECM is numerically unchanged — only provenance differs
+        k = _kernel("stencil_3d_long_range.c", {"M": 130, "N": 1015})
+        sess = AnalysisSession(ivy)
+        a = sess.analyze(k, "ecm", incore="simple")
+        b = sess.analyze(k, "ecm", incore="ports")
+        assert a is not b
+        assert a.t_ecm == pytest.approx(b.t_ecm)
+        assert a.notation().replace("[simple]", "[ports]") == b.notation()
+
+    def test_session_keys_incore_separately(self, ivy):
+        k = _kernel("stencil_3d7pt.c", {"M": 30, "N": 40})
+        sess = AnalysisSession(ivy)
+        a = sess.analyze(k, "ecm")
+        b = sess.analyze(k, "ecm", incore="ports")
+        assert a is not b
+        assert sess.stats.incore_misses == 2
+        assert sess.analyze(k, "ecm", incore="simple") is a
+
+    def test_incore_structural_sharing_across_bind(self, ivy):
+        k = _kernel("stencil_3d7pt.c", {"M": 30, "N": 40})
+        sess = AnalysisSession(ivy)
+        sess.analyze(k, "ecm")
+        sess.analyze(k.bind(N=80), "ecm")
+        sess.analyze(k.bind(N=120, M=60), "ecm")
+        # in-core reads structure only: one miss serves all bound variants
+        assert sess.stats.incore_misses == 1
+        assert sess.stats.incore_hits == 2
+
+    def test_compiled_sweep_incore_once_per_plan(self, ivy):
+        """Acceptance: sweep(compiled=...) evaluates in-core once per plan,
+        asserted via session stats."""
+        k = _kernel("stencil_3d_long_range.c", {"M": 130, "N": 1015})
+        for inc in ("simple", "ports"):
+            sess = AnalysisSession(ivy)
+            out = sess.sweep(k, "N", range(100, 1100, 10),
+                             models=["ecm", "roofline-iaca"],
+                             incore=inc, compiled=True)
+            assert sess.stats.plan_compiles == 1
+            assert sess.stats.incore_misses == 1
+            assert len(out["ecm"]) == 100
+            assert all(r.incore_model == inc for r in out["ecm"])
+
+    def test_compiled_sweep_matches_per_point_under_ports(self, ivy):
+        k = _kernel("stencil_3d_long_range.c", {"M": 130, "N": 1015})
+        vals = [400, 546, 700, 1015]
+        a = AnalysisSession(ivy).sweep(k, "N", vals, incore="ports",
+                                       compiled=True)
+        b = AnalysisSession(ivy).sweep(k, "N", vals, incore="ports",
+                                       compiled=False)
+        for ra, rb in zip(a["ecm"], b["ecm"]):
+            assert ra.to_dict() == rb.to_dict()
+
+    def test_cli_incore_flag(self, capsys):
+        from repro import cli
+        rc = cli.main(["analyze", "configs/stencils/stencil_3d_long_range.c",
+                       "-m", "ivybridge_ep.yaml", "-p", "ecm",
+                       "-p", "roofline-iaca", "--incore", "ports",
+                       "-D", "M", "130", "-D", "N", "1015"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "{ 52.0 || 54.0 | 40.0 | 24.0 | 48." in out
+        assert "[ports]" in out
+        assert "in-core port occupation" in out
+        assert "--incore ports" in out
+
+    def test_cli_incore_json_round_trip(self, capsys):
+        from repro import cli
+        rc = cli.main(["analyze", "configs/stencils/stencil_3d7pt.c",
+                       "-m", "IVY", "-p", "ecm", "--incore", "ports",
+                       "-D", "M", "30", "-D", "N", "40", "--json"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        d = json.loads(out)[0]
+        assert d["incore_model"] == "ports"
+        assert d["incore"]["port_occupation"]["P1"] == pytest.approx(12.0)
+
+    def test_cli_ports_without_table_exits_2(self, tmp_path, capsys):
+        from repro import cli
+        # a machine file without a ports table: --incore ports must fail
+        # cleanly (exit 2 + message), not traceback
+        src = pathlib.Path("src/repro/configs/machines/ivybridge_ep.yaml")
+        text = "\n".join(
+            line for line in src.read_text().splitlines()
+            if not line.startswith(("ports:", "  names:",
+                                    "  non-overlapping:", "  instructions:",
+                                    "    ADD:", "    MUL:", "    DIV:",
+                                    "    LOAD:", "    STORE:", "# Scheduler",
+                                    "# P0DIV", "# P1 =")))
+        # distinct name: api sessions pool per machine name, and the real
+        # IVY (with its ports table) is already pooled in this process
+        text = text.replace("model name: Intel Xeon E5-2690 v2",
+                            "model name: no-ports-variant of")
+        f = tmp_path / "no_ports.yaml"
+        f.write_text(text)
+        rc = cli.main(["analyze", "configs/stencils/stencil_3d7pt.c",
+                       "-m", str(f), "-p", "ecm", "--incore", "ports",
+                       "-D", "M", "30", "-D", "N", "40"])
+        err = capsys.readouterr().err
+        assert rc == 2
+        assert "ports" in err
