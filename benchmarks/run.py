@@ -15,7 +15,8 @@ import time
 from benchmarks import (cli_smoke, incore_bench, kernels_bench, paper_ecm,
                         paper_fig5, paper_fig34, paper_listing4,
                         paper_listing5, paper_table1, roofline_table,
-                        session_cache, sim_bench, sweep_bench, tpu_ecm)
+                        service_bench, session_cache, sim_bench,
+                        sweep_bench, tpu_ecm)
 
 # every section takes the parsed args so speed gates can honor --enforce
 SECTIONS = [
@@ -38,6 +39,8 @@ SECTIONS = [
      lambda a: sweep_bench.run(enforce=a.enforce)),
     ("AnalysisSession — memoized sweep micro-benchmark",
      lambda a: session_cache.run()),
+    ("Analysis service — disk cache, coalescing, worker pool",
+     lambda a: service_bench.run(enforce=a.enforce)),
     ("TPU adaptation — v5e ECM/Roofline for the Pallas kernels",
      lambda a: tpu_ecm.run()),
     ("Pallas kernels — interpret timing + v5e predictions",
@@ -62,6 +65,8 @@ SMOKE = [
      lambda a: sweep_bench.run(smoke=True, enforce=a.enforce)),
     ("AnalysisSession — memoized sweep micro-benchmark",
      lambda a: session_cache.run(points=20)),
+    ("Analysis service — disk cache, coalescing, worker pool (smoke)",
+     lambda a: service_bench.run(smoke=True, enforce=a.enforce)),
     ("CLI — kerncraft-style analyze reproduces Listing 4",
      lambda a: cli_smoke.run()),
 ]

@@ -11,6 +11,12 @@
     python -m repro blocking configs/stencils/stencil_3d_long_range.c -m IVY
     python -m repro blocking configs/stencils/stencil_3d_long_range.c \
         -m IVY -D M 130 -D N 1015 --grid 64 1024 8
+    python -m repro analyze configs/stencils/stencil_3d7pt.c -m IVY \
+        -D M 130 -D N 100 --cache-dir ~/.cache/repro --stats
+    python -m repro sweep configs/stencils/stencil_3d7pt.c -m IVY \
+        --param N --range 100 2000 1 -D M 300 --workers 4 \
+        --cache-dir ~/.cache/repro
+    python -m repro cache stats --cache-dir ~/.cache/repro
 
 Mirrors the paper's UX (``kerncraft -m machine.yml -p ECM kernel.c -D N
 1000``): ``-D`` binds symbolic sizes, ``-p`` picks registered performance
@@ -70,6 +76,15 @@ def _add_common(sp: argparse.ArgumentParser) -> None:
                     help="inner rows measured after warm-up (SIM only, "
                          "default 1)")
     sp.add_argument("--cores", type=int, default=1)
+    sp.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="serve through the disk-backed result cache "
+                         "rooted at DIR (repro.service): warm entries "
+                         "skip all model computation, misses are "
+                         "computed and published for every later run")
+    sp.add_argument("--stats", action="store_true",
+                    help="report cache statistics (hits/misses/disk "
+                         "hits/coalesced); with --json they appear "
+                         "under a 'stats' key")
     sp.add_argument("--json", action="store_true",
                     help="emit machine-readable results (reports.to_json)")
 
@@ -119,6 +134,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "forms and the symbolic path runs once per LC "
                          "regime (results are identical; errors out for "
                          "predictors without a closed form, e.g. SIM)")
+    sp.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="shard the sweep grid across N worker processes "
+                         "(repro.service worker pool; results are "
+                         "to_dict-identical to the sequential sweep and "
+                         "back-filled into --cache-dir when given)")
 
     sp = sub.add_parser("blocking",
                         help="per-level LC blocking factors + model table")
@@ -139,6 +159,16 @@ def build_parser() -> argparse.ArgumentParser:
                     metavar=("SYMBOL", "START", "STOP", "STEP"),
                     help="second grid dimension for a 2D blocking search "
                          "(outer symbol bound per row, inner batched)")
+
+    sp = sub.add_parser("cache",
+                        help="inspect or clear a disk-backed result cache")
+    sp.add_argument("action", choices=["stats", "clear"],
+                    help="'stats' reports entry counts/bytes per kind and "
+                         "schema; 'clear' deletes every entry")
+    sp.add_argument("--cache-dir", required=True, metavar="DIR",
+                    help="cache root (the analyze/sweep --cache-dir)")
+    sp.add_argument("--json", action="store_true",
+                    help="emit the report as JSON")
     return ap
 
 
@@ -153,18 +183,73 @@ def _models(args) -> list[str]:
     return args.performance_model or ["ecm"]
 
 
+def _service(args):
+    """The AnalysisService for --cache-dir (None without it: the plain
+    pooled-session path needs no service tier)."""
+    if getattr(args, "cache_dir", None):
+        from repro.service import AnalysisService
+        return AnalysisService(cache_dir=args.cache_dir)
+    return None
+
+
+def _stats_payload(service, sess) -> dict:
+    """The --stats payload: the service's three-tier counters when one is
+    active, otherwise the session counters under the same shape."""
+    if service is not None:
+        return service.stats_dict()
+    return {"session": sess.stats.to_dict(),
+            "summary": {"hits": sess.stats.hits,
+                        "misses": sess.stats.misses,
+                        "disk_hits": 0, "coalesced": 0}}
+
+
+def _print_stats(payload: dict) -> None:
+    s = payload["summary"]
+    print(f"stats: hits {s['hits']} | misses {s['misses']} | "
+          f"disk hits {s['disk_hits']} | coalesced {s['coalesced']}")
+    ses = payload["session"]
+    print(f"  session: incore {ses['incore_hits']}/{ses['incore_misses']}"
+          f" | volumes {ses['volume_hits']}/{ses['volume_misses']}"
+          f" | results {ses['result_hits']}/{ses['result_misses']}"
+          " (hits/misses)")
+    svc = payload.get("service")
+    if svc:
+        print(f"  service: requests {svc['requests']} | memory hits "
+              f"{svc['memory_hits']} | disk hits {svc['disk_hits']} | "
+              f"computed {svc['computed']} | coalesced {svc['coalesced']}"
+              f" | worker batches {svc['worker_batches']}")
+    store = payload.get("store")
+    if store:
+        print(f"  store: lookups {store['lookups']} | hits {store['hits']}"
+              f" | puts {store['puts']} | corrupt {store['skipped_corrupt']}"
+              f" | stale {store['skipped_schema']}")
+
+
 def cmd_analyze(args) -> int:
     machine, kernel = _load(args)
+    service = _service(args)
     sess = api.get_session(machine)
     results = []
     for model in _models(args):
-        res = sess.analyze(kernel, model, predictor=args.cache_predictor,
-                           cores=args.cores, sim_kwargs=_sim_kwargs(args),
-                           incore=args.incore)
+        if service is not None:
+            res = service.analyze(kernel, machine, model,
+                                  predictor=args.cache_predictor,
+                                  cores=args.cores,
+                                  sim_kwargs=_sim_kwargs(args),
+                                  incore=args.incore)
+        else:
+            res = sess.analyze(kernel, model,
+                               predictor=args.cache_predictor,
+                               cores=args.cores,
+                               sim_kwargs=_sim_kwargs(args),
+                               incore=args.incore)
         results.append((model, res))
     if args.json:
-        print(json.dumps([r.to_dict() for _, r in results], indent=2,
-                         sort_keys=True))
+        payload = [r.to_dict() for _, r in results]
+        if args.stats:
+            payload = {"results": payload,
+                       "stats": _stats_payload(service, sess)}
+        print(json.dumps(payload, indent=2, sort_keys=True))
         return 0
     kname = getattr(kernel, "name", args.kernel)
     defines = " ".join(f"-D {n} {v}" for n, v in args.define)
@@ -178,22 +263,30 @@ def cmd_analyze(args) -> int:
     for model, res in results:
         print()
         print(reports.text_report(res, cores=args.cores))
+    if args.stats:
+        print()
+        _print_stats(_stats_payload(service, sess))
     return 0
 
 
 def cmd_sweep(args) -> int:
     machine, kernel = _load(args)
+    service = _service(args)
     start, stop, step = args.range
     values = list(range(start, stop + 1, step))     # STOP inclusive
     models = _models(args)
     out = api.sweep(kernel, machine, args.param, values, models=models,
                     predictor=args.cache_predictor, cores=args.cores,
                     sim_kwargs=_sim_kwargs(args), incore=args.incore,
+                    service=service, workers=args.workers,
                     compiled=True if args.dense else "auto")
+    sess = None if service is not None else api.get_session(machine)
     if args.json:
-        print(json.dumps(
-            {m: [r.to_dict() for r in rs] for m, rs in out.items()},
-            indent=2, sort_keys=True))
+        payload = {m: [r.to_dict() for r in rs] for m, rs in out.items()}
+        if args.stats:
+            payload = {"results": payload,
+                       "stats": _stats_payload(service, sess)}
+        print(json.dumps(payload, indent=2, sort_keys=True))
         return 0
     print(f"{args.param:>6} | " + " | ".join(f"{m:>18}" for m in models)
           + "   (cy/CL for ecm, GFLOP/s for roofline)")
@@ -206,6 +299,36 @@ def cmd_sweep(args) -> int:
             else:
                 cells.append(f"{r.performance / 1e9:>12.2f} GF/s")
         print(f"{v:>6} | " + " | ".join(f"{c:>18}" for c in cells))
+    if args.stats:
+        print()
+        _print_stats(_stats_payload(service, sess))
+    return 0
+
+
+def cmd_cache(args) -> int:
+    from repro.service import ResultStore
+    store = ResultStore(args.cache_dir)
+    if args.action == "clear":
+        n = store.clear()
+        if args.json:
+            print(json.dumps({"cleared": n, "root": str(store.root)}))
+        else:
+            print(f"cleared {n} cache entr{'y' if n == 1 else 'ies'} "
+                  f"under {store.root}")
+        return 0
+    s = store.summary(detail=True)
+    if args.json:
+        print(json.dumps(s, indent=2, sort_keys=True))
+        return 0
+    print(f"result cache at {s['root']} (schema v{s['schema']}):")
+    print(f"  {s['entries']} entries, {s['bytes'] / 1024:.1f} kB")
+    for kind, n in sorted(s["by_kind"].items()):
+        print(f"    {kind:<10} {n}")
+    stale = sum(n for v, n in s["by_schema"].items()
+                if v != str(s["schema"]))
+    if stale:
+        print(f"  {stale} entries from other schema versions "
+              "(ignored by lookups; 'cache clear' removes them)")
     return 0
 
 
@@ -273,7 +396,7 @@ def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     try:
         return {"analyze": cmd_analyze, "sweep": cmd_sweep,
-                "blocking": cmd_blocking}[args.command](args)
+                "blocking": cmd_blocking, "cache": cmd_cache}[args.command](args)
     except (ValueError, TypeError, FileNotFoundError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2

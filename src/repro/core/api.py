@@ -93,6 +93,7 @@ def analyze(source: Any, machine: Machine | str, model: str = "ecm",
             cores: int = 1, sim_kwargs: dict | None = None,
             incore: str = "simple",
             session: AnalysisSession | None = None,
+            service=None,
             frontend_opts: dict | None = None, **opts) -> Result:
     """Analyze any kernel source under any registered model.
 
@@ -106,8 +107,18 @@ def analyze(source: Any, machine: Machine | str, model: str = "ecm",
     and the result records in ``predictor_params``.  ``incore`` names the
     registered in-core model ('simple'/'ports', the CLI's ``--incore``);
     results record it in ``incore_model``.  Pass ``session=`` to use your
-    own memoizing session instead of the pooled per-machine one.
+    own memoizing session instead of the pooled per-machine one, or
+    ``service=`` (an :class:`repro.service.AnalysisService`) to serve the
+    request through the disk-backed, coalescing service tier instead.
     """
+    if service is not None:
+        if session is not None:
+            raise ValueError("pass either session= or service=, not both")
+        return service.analyze(source, machine, model, predictor,
+                               frontend=frontend, name=name,
+                               constants=constants, cores=cores,
+                               sim_kwargs=sim_kwargs, incore=incore,
+                               frontend_opts=frontend_opts, **opts)
     mach = resolve_machine(machine)
     kernel = _load_kernel_cached(source, frontend, name, constants,
                                  frontend_opts)
@@ -126,6 +137,7 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
           constants: dict | None = None, cores: int = 1,
           sim_kwargs: dict | None = None, incore: str = "simple",
           session: AnalysisSession | None = None,
+          service=None, workers: int = 0,
           frontend_opts: dict | None = None,
           compiled: bool | str = "auto",
           **opts) -> dict[str, list[Result]]:
@@ -137,10 +149,29 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
     eligible sweeps through the compiled analytic plan
     (:mod:`repro.core.compiled` — results stay bit-for-bit identical),
     ``True`` requires it (the CLI's ``sweep --dense``), ``False`` forces
-    the per-point symbolic path."""
+    the per-point symbolic path.  ``service=`` routes the whole sweep
+    through an :class:`repro.service.AnalysisService` (disk cache +
+    coalescing); ``workers > 1`` shards the grid across a process pool
+    (:func:`repro.service.sweep_sharded`, the CLI's ``--workers``) —
+    both produce ``to_dict``-identical results."""
+    if service is not None:
+        if session is not None:
+            raise ValueError("pass either session= or service=, not both")
+        return service.sweep(source, machine, param, values, models=models,
+                             predictor=predictor, frontend=frontend,
+                             name=name, constants=constants, cores=cores,
+                             sim_kwargs=sim_kwargs, incore=incore,
+                             frontend_opts=frontend_opts,
+                             compiled=compiled, workers=workers, **opts)
     mach = resolve_machine(machine)
     kernel = _load_kernel_cached(source, frontend, name, constants,
                                  frontend_opts)
+    if workers and workers > 1:
+        from repro.service.workers import sweep_sharded
+        return sweep_sharded(kernel, mach, param, values, models=models,
+                             predictor=predictor, cores=cores,
+                             sim_kwargs=sim_kwargs, incore=incore,
+                             compiled=compiled, workers=workers, opts=opts)
     sess = session if session is not None else get_session(mach)
     if sess.machine.name != mach.name:
         raise ValueError(

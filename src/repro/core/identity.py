@@ -17,6 +17,8 @@ key is just a slower cache hit, never a correctness issue.
 """
 from __future__ import annotations
 
+import hashlib
+
 from .kernel_ir import LoopKernel
 
 _STRUCT_KEYS: dict[int, tuple] = {}
@@ -113,3 +115,29 @@ def freeze(v):
     if isinstance(v, (list, tuple, set)):
         return tuple(freeze(x) for x in v)
     return v
+
+
+def _canonical(v):
+    """Like :func:`freeze`, but *cross-process* stable: dict keys are
+    stringified before sorting (YAML payloads mix int and str keys, which
+    Python 3 refuses to order) and anything that is not a JSON-ish scalar
+    is reduced to its repr."""
+    if isinstance(v, dict):
+        return tuple(sorted((str(k), _canonical(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple, set)):
+        return tuple(_canonical(x) for x in v)
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return repr(v)
+
+
+def stable_digest(v, length: int = 16) -> str:
+    """Deterministic content hash of any nested key/payload structure.
+
+    Unlike ``hash()`` (salted per process), the digest is stable across
+    processes and machine restarts, which is what lets the disk-backed
+    result store (:mod:`repro.service.store`) and the sweep worker pool
+    address one shared cache.
+    """
+    blob = repr(_canonical(v)).encode()
+    return hashlib.sha256(blob).hexdigest()[:length]

@@ -21,6 +21,8 @@ from typing import Any
 
 import yaml
 
+from . import identity as _identity
+
 _MACHINE_DIR = pathlib.Path(__file__).resolve().parent.parent / "configs" / "machines"
 
 INF = float("inf")
@@ -221,6 +223,21 @@ class Machine:
     extra: dict = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------------
+    @functools.cached_property
+    def fingerprint(self) -> str:
+        """Content hash of the *normalized* machine description.
+
+        Hashes the parsed dataclass payload — the result of
+        :meth:`from_dict` — never the YAML path or file mtime, so two
+        byte-identical (or merely equivalent after parsing: '32 kB' vs
+        32000) machine files share one fingerprint, while editing any
+        modeled value produces a new one.  This is the machine component
+        of every disk-cache key (:mod:`repro.service.store`): renaming or
+        copying a machine file keeps its cache entries warm; changing its
+        contents invalidates them.
+        """
+        return _identity.stable_digest(dataclasses.asdict(self))
+
     @property
     def level_names(self) -> list[str]:
         return [lv.name for lv in self.levels]

@@ -70,6 +70,20 @@ class SessionStats:
     def misses(self) -> int:
         return self.incore_misses + self.volume_misses + self.result_misses
 
+    def to_dict(self) -> dict:
+        """JSON-safe counters (the CLI's ``--stats`` / service ``cache
+        stats`` payload): every field plus the derived totals."""
+        d = dataclasses.asdict(self)
+        d["hits"] = self.hits
+        d["misses"] = self.misses
+        return d
+
+    def add(self, other: "SessionStats") -> "SessionStats":
+        """Elementwise sum (aggregating a service's per-machine sessions)."""
+        return SessionStats(**{
+            f.name: getattr(self, f.name) + getattr(other, f.name)
+            for f in dataclasses.fields(SessionStats)})
+
 
 class AnalysisSession:
     """Shared, memoized predictor/in-core/model state for one machine."""
@@ -108,10 +122,10 @@ class AnalysisSession:
         and the compiled-sweep broadcast, which prefills the same tier)."""
         return (model_name, kernel_key(kernel), self.machine.name,
                 predictor.upper(), cores,
-                self._sim_key(predictor, sim_kwargs), incore.lower(),
+                self.sim_key(predictor, sim_kwargs), incore.lower(),
                 _freeze(opts))
 
-    def _sim_key(self, predictor: str, sim_kwargs: dict) -> tuple:
+    def sim_key(self, predictor: str, sim_kwargs: dict) -> tuple:
         """Cache-key fragment for the simulation options.
 
         Normalized so equivalent spellings share entries: predictors that
@@ -151,7 +165,7 @@ class AnalysisSession:
         predictor, cores, sim_kwargs = self._defaults(predictor, cores,
                                                       sim_kwargs)
         key = (kernel_key(kernel), self.machine.name, predictor.upper(),
-               cores, self._sim_key(predictor, sim_kwargs))
+               cores, self.sim_key(predictor, sim_kwargs))
         hit = self._volumes.get(key)
         if hit is not None:
             self.stats.volume_hits += 1
@@ -218,6 +232,30 @@ class AnalysisSession:
                         incore_result=ic, **opts)
         self._results[key] = res
         return res
+
+    def seed_result(self, kernel, model: str, result: Result,
+                    predictor: str | None = None, cores: int | None = None,
+                    sim_kwargs: dict | None = None,
+                    incore: str | None = None, **opts) -> None:
+        """Prefill the result tier with an externally computed ``result``.
+
+        The service layer (:mod:`repro.service`) uses this to back-fill
+        disk-cache hits and worker-pool shards, so later lookups through
+        this session are warm hits instead of recomputations.  The key is
+        built exactly like :meth:`analyze`'s, so a seeded entry and a
+        computed one are indistinguishable.
+        """
+        m = resolve_model(model)
+        if m.input_kind != "loop":
+            key = (m.name, source_key(kernel), self.machine.name,
+                   _freeze(opts))
+        else:
+            predictor, cores, sim_kwargs = self._defaults(predictor, cores,
+                                                          sim_kwargs)
+            incore = self.incore_model if incore is None else incore
+            key = self._loop_key(m.name, kernel, predictor, cores,
+                                 sim_kwargs, incore, opts)
+        self._results[key] = result
 
     # ------------------------------------------------------------------
     def sweep_plan(self, kernel: LoopKernel, param: str,

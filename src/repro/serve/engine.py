@@ -3,6 +3,12 @@ generate loop, and a request-queue driver (bucketed batching).
 
 decode_step lowers ONE new token against a ``max_len`` KV cache — this is
 the function the ``decode_32k`` / ``long_500k`` dry-run cells compile.
+
+The submit/drain request-queue shape of :class:`BatchedServer` is reused
+by the analysis service tier (:class:`repro.service.AnalysisServer`),
+which drains queued analyze/sweep requests through a coalescing,
+disk-cached :class:`repro.service.AnalysisService` instead of a token
+generator.
 """
 from __future__ import annotations
 

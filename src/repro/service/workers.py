@@ -1,0 +1,132 @@
+"""Sweep worker pool: shard dense grids across processes (DESIGN.md §9).
+
+A sweep over a large parameter grid is embarrassingly parallel across
+values — the compiled plan (:mod:`repro.core.compiled`) batches the whole
+grid on one core, but plan compilation, regime representatives, and the
+SIM predictor's per-point simulations still serialize.  The pool follows
+the batching/queue shape of :mod:`repro.serve.engine`'s request driver:
+chunk the grid into contiguous shards, run each shard through a fresh
+:class:`~repro.core.session.AnalysisSession` in its own process
+(``sweep(compiled=...)`` — each worker compiles the plan once for its
+chunk), ship the deduplicated ``to_dict`` payloads back, and merge them
+in value order.  The merged lists are bit-for-bit ``to_dict``-identical
+to a sequential sweep, which the service layer relies on to back-fill
+the shared disk store.
+
+Workers are spawned (not forked): the parent process may hold JAX/XLA
+threads whose locks a fork would clone mid-flight.  Spawned children
+locate :mod:`repro` through ``PYTHONPATH``, which :func:`sweep_sharded`
+extends with the package root when needed.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import pathlib
+from concurrent.futures import ProcessPoolExecutor
+
+import repro
+from repro.core.kernel_ir import LoopKernel
+from repro.core.machine import Machine
+from repro.core.session import AnalysisSession
+
+from .store import decode_results, encode_results
+
+
+def chunk_values(values: list, workers: int) -> list[list]:
+    """Split ``values`` into at most ``workers`` contiguous chunks whose
+    sizes differ by at most one (order preserved)."""
+    workers = max(1, int(workers))
+    base, extra = divmod(len(values), workers)
+    out, i = [], 0
+    for j in range(workers):
+        size = base + (1 if j < extra else 0)
+        if size:
+            out.append(values[i:i + size])
+            i += size
+    return out
+
+
+def _run_chunk(machine: Machine, kernel: LoopKernel, param: str,
+               values: list, models: tuple, predictor: str, cores: int,
+               sim_kwargs: dict | None, incore: str, compiled,
+               opts: dict) -> dict:
+    """Worker entry: one shard through a fresh session, results wire-
+    encoded (unique payloads + index) to keep IPC proportional to the
+    number of LC regimes, not grid points."""
+    sess = AnalysisSession(machine)
+    out = sess.sweep(kernel, param, values, models=models,
+                     predictor=predictor, cores=cores,
+                     sim_kwargs=sim_kwargs, incore=incore,
+                     compiled=compiled, **opts)
+    return {m: encode_results(rs) for m, rs in out.items()}
+
+
+def _ensure_importable_env() -> tuple[str, str | None]:
+    """Point spawned children's ``PYTHONPATH`` at the repro package root;
+    returns (key, previous value) so the caller can restore it."""
+    # repro is a namespace package (__file__ is None): locate it via
+    # __path__ instead
+    src_root = str(pathlib.Path(list(repro.__path__)[0]).resolve().parent)
+    old = os.environ.get("PYTHONPATH")
+    if src_root not in (old or "").split(os.pathsep):
+        os.environ["PYTHONPATH"] = (src_root + os.pathsep + old
+                                    if old else src_root)
+    return "PYTHONPATH", old
+
+
+def sweep_sharded(kernel: LoopKernel, machine: Machine, param: str,
+                  values, models=("ecm",), predictor: str = "LC",
+                  cores: int = 1, sim_kwargs: dict | None = None,
+                  incore: str = "simple", compiled: bool | str = "auto",
+                  workers: int = 2, opts: dict | None = None,
+                  start_method: str | None = None) -> dict:
+    """Evaluate a sweep across a pool of worker processes.
+
+    Returns the same ``{model: [Result per value]}`` mapping as
+    :meth:`AnalysisSession.sweep`, with results that serialize
+    identically (``to_dict`` parity is pinned by tests and
+    ``benchmarks/service_bench.py``).  Regime-shared results stay shared
+    objects even across shard boundaries.  With one chunk (or one value)
+    the pool is skipped entirely.
+
+    ``start_method`` overrides the multiprocessing context (default
+    ``spawn``; the ``REPRO_WORKER_START_METHOD`` environment variable
+    also works).
+    """
+    if not isinstance(kernel, LoopKernel):
+        raise TypeError(
+            "worker-pool sweeps vary symbolic loop constants, which only "
+            f"LoopKernel sources carry (got {type(kernel).__name__})")
+    values = list(values)
+    model_names = [str(m) for m in models]
+    chunks = chunk_values(values, workers)
+    if len(chunks) <= 1:
+        sess = AnalysisSession(machine)
+        return sess.sweep(kernel, param, values, models=model_names,
+                          predictor=predictor, cores=cores,
+                          sim_kwargs=sim_kwargs, incore=incore,
+                          compiled=compiled, **(opts or {}))
+    method = (start_method
+              or os.environ.get("REPRO_WORKER_START_METHOD", "spawn"))
+    ctx = mp.get_context(method)
+    env_key, env_old = _ensure_importable_env()
+    try:
+        with ProcessPoolExecutor(max_workers=len(chunks),
+                                 mp_context=ctx) as ex:
+            futs = [ex.submit(_run_chunk, machine, kernel, param, c,
+                              tuple(model_names), predictor, cores,
+                              sim_kwargs, incore, compiled, opts or {})
+                    for c in chunks]
+            parts = [f.result() for f in futs]
+    finally:
+        if env_old is None:
+            os.environ.pop(env_key, None)
+        else:
+            os.environ[env_key] = env_old
+    out: dict[str, list] = {m: [] for m in model_names}
+    shared: dict[str, object] = {}
+    for part in parts:
+        for m in model_names:
+            out[m].extend(decode_results(part[m], shared=shared))
+    return out

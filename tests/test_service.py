@@ -1,0 +1,457 @@
+"""Analysis-as-a-service tests (DESIGN.md §9): the disk-backed result
+store (schema versioning, corruption handling), machine fingerprinting,
+the AnalysisService tiers (memory/disk/coalescing — exactly one
+computation per distinct key), the sharded sweep worker pool, and the
+CLI surface (--cache-dir / --stats / the cache subcommand)."""
+import dataclasses
+import json
+import shutil
+import threading
+
+import pytest
+
+from repro import cli
+from repro.core import api
+from repro.core.machine import Machine, load as load_machine
+from repro.core.session import AnalysisSession
+from repro.service import (AnalysisRequest, AnalysisServer, AnalysisService,
+                           ResultStore, sweep_sharded)
+from repro.service import store as store_mod
+
+STENCIL = "configs/stencils/stencil_3d7pt.c"
+MACHINE_YAML = "src/repro/configs/machines/ivybridge_ep.yaml"
+
+
+def _kernel(n=100, m=130):
+    return api.load_kernel(STENCIL, constants={"M": m, "N": n})
+
+
+def _analyze_args(n=100):
+    return dict(source=STENCIL, machine="IVY", model="ecm",
+                constants={"M": 130, "N": n})
+
+
+# ----------------------------------------------------------------------
+# ResultStore
+# ----------------------------------------------------------------------
+
+def test_store_round_trip(tmp_path):
+    store = ResultStore(tmp_path)
+    key = ("analyze", "ecm", ("some", "key"), "fp", "LC")
+    assert store.get(key) is None
+    store.put(key, {"model": "ecm", "t_ecm": 46.2}, meta={"kind": "analyze"})
+    assert store.get(key) == {"model": "ecm", "t_ecm": 46.2}
+    # sharded layout: <root>/<digest[:2]>/<digest>.json
+    path = store.path(key)
+    assert path.parent.parent == store.root and len(path.parent.name) == 2
+    assert store.stats.hits == 1 and store.stats.puts == 1
+
+
+def test_store_distinct_keys_distinct_entries(tmp_path):
+    store = ResultStore(tmp_path)
+    store.put(("k", 1), {"v": 1})
+    store.put(("k", 2), {"v": 2})
+    assert store.get(("k", 1)) == {"v": 1}
+    assert store.get(("k", 2)) == {"v": 2}
+    assert store.summary()["entries"] == 2
+
+
+def test_store_corrupt_entry_is_miss_then_overwritten(tmp_path):
+    store = ResultStore(tmp_path)
+    key = ("corrupt-me",)
+    path = store.path(key)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text('{"schema": 1, "payload": {truncated')
+    assert store.get(key) is None
+    assert store.stats.skipped_corrupt == 1
+    store.put(key, {"ok": True})            # overwrite, not crash
+    assert store.get(key) == {"ok": True}
+
+
+def test_store_schema_mismatch_is_skipped_never_deserialized(tmp_path):
+    store = ResultStore(tmp_path)
+    key = ("stale",)
+    path = store.path(key)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    # an entry written by a future/past schema at the same address must be
+    # skipped — from_dict never sees its payload
+    path.write_text(json.dumps({"schema": store_mod.SCHEMA_VERSION + 1,
+                                "payload": {"model": "not-even-a-result"}}))
+    assert store.get(key) is None
+    assert store.stats.skipped_schema == 1
+
+
+def test_store_digest_includes_schema_version(tmp_path, monkeypatch):
+    store = ResultStore(tmp_path)
+    key = ("versioned",)
+    old = store.path(key)
+    monkeypatch.setattr(store_mod, "SCHEMA_VERSION",
+                        store_mod.SCHEMA_VERSION + 1)
+    assert store.path(key) != old
+
+
+def test_store_clear_and_summary(tmp_path):
+    store = ResultStore(tmp_path)
+    store.put(("a",), {"v": 1}, meta={"kind": "analyze"})
+    store.put(("b",), {"v": 2}, meta={"kind": "sweep"})
+    s = store.summary(detail=True)
+    assert s["entries"] == 2 and s["bytes"] > 0
+    assert s["by_kind"] == {"analyze": 1, "sweep": 1}
+    assert store.clear() == 2
+    assert store.summary()["entries"] == 0
+
+
+def test_encode_decode_results_dedup():
+    sess = AnalysisSession(api.resolve_machine("IVY"))
+    out = sess.sweep(_kernel(), "N", range(100, 400, 10), compiled=True)
+    enc = store_mod.encode_results(out["ecm"])
+    assert len(enc["index"]) == len(out["ecm"])
+    # LC traffic is piecewise-constant: far fewer unique payloads than
+    # points, and the index reconstructs every point exactly
+    assert len(enc["unique"]) < len(out["ecm"])
+    dec = store_mod.decode_results(enc)
+    assert [r.to_dict() for r in dec] == [r.to_dict() for r in out["ecm"]]
+    # points that shared a payload share one rebuilt object
+    assert len({id(r) for r in dec}) == len(enc["unique"])
+
+
+# ----------------------------------------------------------------------
+# Machine fingerprinting (content, not path/mtime)
+# ----------------------------------------------------------------------
+
+def test_machine_fingerprint_identical_files_share(tmp_path):
+    a = tmp_path / "copy_a.yaml"
+    b = tmp_path / "renamed_b.yaml"
+    shutil.copy(MACHINE_YAML, a)
+    shutil.copy(MACHINE_YAML, b)
+    ma, mb = Machine.from_yaml(a), Machine.from_yaml(b)
+    assert ma.fingerprint == mb.fingerprint
+    # ... and both match the bundled file: the path never enters the hash
+    assert ma.fingerprint == load_machine("IVY").fingerprint
+
+
+def test_machine_fingerprint_edit_invalidates(tmp_path):
+    src = open(MACHINE_YAML).read()
+    edited = tmp_path / "edited.yaml"
+    assert "clock: 3.0 GHz" in src
+    edited.write_text(src.replace("clock: 3.0 GHz", "clock: 4.0 GHz"))
+    assert Machine.from_yaml(edited).fingerprint \
+        != load_machine("IVY").fingerprint
+
+
+def test_machine_fingerprint_on_hand_built_machine():
+    m = load_machine("IVY")
+    clone = dataclasses.replace(m)
+    assert clone.fingerprint == m.fingerprint
+    assert dataclasses.replace(m, cacheline_bytes=128).fingerprint \
+        != m.fingerprint
+
+
+def test_service_sessions_pool_by_fingerprint(tmp_path):
+    svc = AnalysisService()
+    a = tmp_path / "a.yaml"
+    shutil.copy(MACHINE_YAML, a)
+    # same contents, three spellings -> one pooled session
+    assert svc.session("IVY") is svc.session(str(a))
+    assert svc.session(load_machine("IVY")) is svc.session("IVY")
+
+
+# ----------------------------------------------------------------------
+# AnalysisService: tiers and parity
+# ----------------------------------------------------------------------
+
+def test_service_disk_parity_and_no_recompute(tmp_path):
+    svc1 = AnalysisService(cache_dir=tmp_path)
+    r1 = svc1.analyze(**_analyze_args())
+    assert svc1.stats.computed == 1
+    # a fresh service over the same root: pure disk hit, no model runs
+    svc2 = AnalysisService(cache_dir=tmp_path)
+    r2 = svc2.analyze(**_analyze_args())
+    assert r2.to_dict() == r1.to_dict()
+    assert svc2.stats.disk_hits == 1 and svc2.stats.computed == 0
+    assert svc2.session_stats().misses == 0
+    # the disk hit seeded the pooled session: going around the service
+    # straight to the session is now a warm hit too
+    sess = svc2.session("IVY")
+    r3 = sess.analyze(_kernel(), "ecm")
+    assert r3 is r2 and sess.stats.result_hits == 1
+
+
+def test_service_memory_tier_returns_same_object(tmp_path):
+    svc = AnalysisService(cache_dir=tmp_path)
+    r1 = svc.analyze(**_analyze_args())
+    r2 = svc.analyze(**_analyze_args())
+    assert r1 is r2
+    assert svc.stats.memory_hits == 1
+
+
+def test_service_without_store_still_memoizes():
+    svc = AnalysisService()                  # no cache_dir: no disk tier
+    assert svc.store is None
+    r1 = svc.analyze(**_analyze_args())
+    assert svc.analyze(**_analyze_args()) is r1
+
+
+def test_service_sweep_disk_round_trip(tmp_path):
+    values = list(range(100, 300, 10))
+    svc1 = AnalysisService(cache_dir=tmp_path)
+    out1 = svc1.sweep(STENCIL, "IVY", "N", values,
+                      models=("ecm", "roofline"), constants={"M": 130})
+    svc2 = AnalysisService(cache_dir=tmp_path)
+    out2 = svc2.sweep(STENCIL, "IVY", "N", values,
+                      models=("ecm", "roofline"), constants={"M": 130})
+    assert svc2.stats.disk_hits == 1 and svc2.stats.computed == 0
+    assert svc2.session_stats().misses == 0
+    for m in ("ecm", "roofline"):
+        assert [r.to_dict() for r in out2[m]] \
+            == [r.to_dict() for r in out1[m]]
+
+
+def test_service_sweep_key_ignores_engine_spelling(tmp_path):
+    # compiled=True and compiled=False produce bit-identical results by
+    # design (PR 4), so they must share one cache entry
+    values = list(range(100, 160, 10))
+    svc = AnalysisService(cache_dir=tmp_path)
+    out1 = svc.sweep(STENCIL, "IVY", "N", values, constants={"M": 130},
+                     compiled=True)
+    out2 = svc.sweep(STENCIL, "IVY", "N", values, constants={"M": 130},
+                     compiled=False)
+    assert svc.stats.memory_hits == 1 and svc.stats.computed == 1
+    assert [r.to_dict() for r in out1["ecm"]] \
+        == [r.to_dict() for r in out2["ecm"]]
+
+
+def test_service_distinct_options_key_separately(tmp_path):
+    svc = AnalysisService(cache_dir=tmp_path)
+    r_simple = svc.analyze(**_analyze_args(), incore="simple")
+    r_ports = svc.analyze(**_analyze_args(), incore="ports")
+    assert svc.stats.computed == 2
+    assert r_simple.to_dict() != r_ports.to_dict()
+
+
+def test_api_analyze_routes_through_service(tmp_path):
+    svc = AnalysisService(cache_dir=tmp_path)
+    r1 = api.analyze(STENCIL, "IVY", constants={"M": 130, "N": 100},
+                     service=svc)
+    assert svc.stats.requests == 1
+    direct = AnalysisSession(api.resolve_machine("IVY")).analyze(
+        _kernel(), "ecm")
+    assert r1.to_dict() == direct.to_dict()
+    with pytest.raises(ValueError, match="not both"):
+        api.analyze(STENCIL, "IVY", constants={"M": 130, "N": 100},
+                    service=svc, session=AnalysisSession(
+                        api.resolve_machine("IVY")))
+
+
+# ----------------------------------------------------------------------
+# Concurrency: single-flight coalescing
+# ----------------------------------------------------------------------
+
+def test_threaded_identical_and_distinct_requests(tmp_path):
+    """N threads x (identical + distinct) requests -> exactly one
+    computation per distinct key, identical to_dict payloads."""
+    svc = AnalysisService(cache_dir=tmp_path)
+    sizes = [100, 200, 300, 400]             # 4 distinct keys
+    n_threads = 16                           # 4 threads per key
+    barrier = threading.Barrier(n_threads)
+    results: list = [None] * n_threads
+    errors: list = []
+
+    def worker(i):
+        try:
+            barrier.wait()
+            results[i] = svc.analyze(**_analyze_args(sizes[i % len(sizes)]))
+        except Exception as e:               # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    # exactly one computation per distinct key, at every tier
+    assert svc.stats.computed == len(sizes)
+    assert svc.session_stats().result_misses == len(sizes)
+    assert svc.stats.memory_hits + svc.stats.coalesced \
+        == n_threads - len(sizes)
+    # identical requests returned identical payloads (same object, even)
+    by_size: dict[int, list] = {}
+    for i, r in enumerate(results):
+        by_size.setdefault(sizes[i % len(sizes)], []).append(r)
+    for group in by_size.values():
+        assert all(r is group[0] for r in group)
+
+
+def test_analyze_many_coalesces_and_preserves_order(tmp_path):
+    svc = AnalysisService(cache_dir=tmp_path, threads=8)
+    reqs = [_analyze_args(n) for n in (100, 200, 100, 300, 200, 100)]
+    out = svc.analyze_many(reqs)
+    assert svc.stats.computed == 3
+    assert out[0] is out[2] is out[5] and out[1] is out[4]
+    # N=100/300 may share an LC regime (equal payloads), but distinct
+    # keys never share cache entries
+    assert out[0] is not out[3]
+    svc.close()
+
+
+def test_sweep_many():
+    svc = AnalysisService()
+    reqs = [dict(source=STENCIL, machine="IVY", param="N",
+                 values=range(100, 160, 10), constants={"M": m})
+            for m in (130, 140, 130)]
+    outs = svc.sweep_many(reqs)
+    assert svc.stats.computed == 2           # the duplicate M=130 shared
+    assert [r.to_dict() for r in outs[0]["ecm"]] \
+        == [r.to_dict() for r in outs[2]["ecm"]]
+    svc.close()
+
+
+def test_analysis_server_queue_facade():
+    svc = AnalysisService()
+    server = AnalysisServer(svc, batch_size=4)
+    for uid in range(3):
+        server.submit(AnalysisRequest(uid=uid, kind="analyze",
+                                      request=_analyze_args(100)))
+    server.submit(AnalysisRequest(
+        uid=99, kind="sweep",
+        request=dict(source=STENCIL, machine="IVY", param="N",
+                     values=range(100, 140, 10), constants={"M": 130})))
+    server.submit(AnalysisRequest(
+        uid=100, kind="analyze",
+        request=dict(source=STENCIL, machine="IVY", model="no-such-model",
+                     constants={"M": 130, "N": 100})))
+    done = server.drain()
+    assert len(done) == 5 and all(r.done for r in done)
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].result is by_uid[2].result      # deduped
+    assert "ecm" in by_uid[99].result
+    assert by_uid[100].error and "no-such-model" in by_uid[100].error
+    assert by_uid[100].result is None
+    with pytest.raises(ValueError, match="unknown request kind"):
+        server.submit(AnalysisRequest(uid=1, kind="nope"))
+    svc.close()
+
+
+# ----------------------------------------------------------------------
+# Worker pool: sharded sweeps merge to the sequential result
+# ----------------------------------------------------------------------
+
+def test_worker_pool_merge_equals_sequential_sweep(tmp_path):
+    values = list(range(100, 400, 20))       # 15 points, 2 workers
+    kernel = _kernel()
+    mach = api.resolve_machine("IVY")
+    sharded = sweep_sharded(kernel, mach, "N", values,
+                            models=("ecm", "roofline-iaca"), workers=2)
+    seq = AnalysisSession(mach).sweep(kernel, "N", values,
+                                      models=("ecm", "roofline-iaca"),
+                                      compiled=True)
+    for m in ("ecm", "roofline-iaca"):
+        assert [r.to_dict() for r in sharded[m]] \
+            == [r.to_dict() for r in seq[m]]
+    # regime-sharing survives the shard merge: one object per payload
+    assert len({id(r) for r in sharded["ecm"]}) \
+        == len({json.dumps(r.to_dict(), sort_keys=True)
+                for r in seq["ecm"]})
+
+    # the service's worker path back-fills the store: a fresh service
+    # serves the same sweep from disk without computing anything
+    svc = AnalysisService(cache_dir=tmp_path)
+    out = svc.sweep(STENCIL, "IVY", "N", values, constants={"M": 130},
+                    workers=2)
+    assert svc.stats.worker_batches == 1
+    svc2 = AnalysisService(cache_dir=tmp_path)
+    out2 = svc2.sweep(STENCIL, "IVY", "N", values, constants={"M": 130})
+    assert svc2.stats.disk_hits == 1 and svc2.session_stats().misses == 0
+    assert [r.to_dict() for r in out2["ecm"]] \
+        == [r.to_dict() for r in out["ecm"]] \
+        == [r.to_dict() for r in seq["ecm"]]
+
+
+def test_worker_pool_single_chunk_runs_inline():
+    values = [100, 110]
+    out = sweep_sharded(_kernel(), api.resolve_machine("IVY"), "N",
+                        values, workers=1)
+    seq = AnalysisSession(api.resolve_machine("IVY")).sweep(
+        _kernel(), "N", values)
+    assert [r.to_dict() for r in out["ecm"]] \
+        == [r.to_dict() for r in seq["ecm"]]
+
+
+def test_worker_pool_rejects_non_loop_sources():
+    with pytest.raises(TypeError, match="LoopKernel"):
+        sweep_sharded("not a kernel", api.resolve_machine("IVY"), "N",
+                      [1, 2], workers=2)
+
+
+# ----------------------------------------------------------------------
+# CLI surface
+# ----------------------------------------------------------------------
+
+def run_cli(argv, capsys):
+    rc = cli.main(argv)
+    cap = capsys.readouterr()
+    return rc, cap.out, cap.err
+
+
+ANALYZE = ["analyze", STENCIL, "-m", "IVY", "-D", "M", "130",
+           "-D", "N", "100"]
+
+
+def test_cli_cache_dir_round_trip(tmp_path, capsys):
+    cache = [f"--cache-dir", str(tmp_path)]
+    rc, cold, _ = run_cli(ANALYZE + cache + ["--stats", "--json"], capsys)
+    assert rc == 0
+    cold = json.loads(cold)
+    assert cold["stats"]["service"]["computed"] == 1
+    rc, warm, _ = run_cli(ANALYZE + cache + ["--stats", "--json"], capsys)
+    assert rc == 0
+    warm = json.loads(warm)
+    # warm run: disk hit, zero model computation, identical results
+    assert warm["stats"]["service"]["disk_hits"] == 1
+    assert warm["stats"]["service"]["computed"] == 0
+    assert warm["stats"]["session"]["misses"] == 0
+    assert warm["results"] == cold["results"]
+
+
+def test_cli_stats_without_cache_dir(capsys):
+    rc, out, _ = run_cli(ANALYZE + ["--stats"], capsys)
+    assert rc == 0
+    assert "stats: hits" in out and "coalesced" in out
+    rc, out, _ = run_cli(ANALYZE + ["--stats", "--json"], capsys)
+    payload = json.loads(out)
+    assert set(payload) == {"results", "stats"}
+    assert "summary" in payload["stats"]
+
+
+def test_cli_json_shape_unchanged_without_stats(capsys):
+    rc, out, _ = run_cli(ANALYZE + ["--json"], capsys)
+    assert rc == 0
+    payload = json.loads(out)
+    assert isinstance(payload, list) and payload[0]["model"] == "ecm"
+
+
+def test_cli_cache_stats_and_clear(tmp_path, capsys):
+    cache = ["--cache-dir", str(tmp_path)]
+    rc, _, _ = run_cli(ANALYZE + cache, capsys)
+    assert rc == 0
+    rc, out, _ = run_cli(["cache", "stats"] + cache + ["--json"], capsys)
+    assert rc == 0
+    s = json.loads(out)
+    assert s["entries"] == 1 and s["by_kind"] == {"analyze": 1}
+    rc, out, _ = run_cli(["cache", "clear"] + cache, capsys)
+    assert rc == 0 and "cleared 1" in out
+    rc, out, _ = run_cli(["cache", "stats"] + cache + ["--json"], capsys)
+    assert json.loads(out)["entries"] == 0
+
+
+def test_cli_sweep_stats_json(tmp_path, capsys):
+    rc, out, _ = run_cli(
+        ["sweep", STENCIL, "-m", "IVY", "--param", "N", "--range", "100",
+         "150", "10", "-D", "M", "130", "--cache-dir", str(tmp_path),
+         "--stats", "--json"], capsys)
+    assert rc == 0
+    payload = json.loads(out)
+    assert len(payload["results"]["ecm"]) == 6
+    assert payload["stats"]["service"]["requests"] == 1
