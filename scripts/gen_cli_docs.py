@@ -40,7 +40,8 @@ as the machine-readable ``to_dict()`` JSON stream (see
 def _option_rows(sp: argparse.ArgumentParser) -> list[tuple[str, str]]:
     rows = []
     for act in sp._actions:
-        if isinstance(act, argparse._HelpAction):
+        if isinstance(act, (argparse._HelpAction,
+                            argparse._SubParsersAction)):
             continue
         if not act.option_strings:          # positional
             name = f"`{act.dest}`"
@@ -81,17 +82,28 @@ def render() -> str:
     lines.append(f"```\n{ap.format_usage().strip()}\n```\n")
     sub_action = next(a for a in ap._actions
                       if isinstance(a, argparse._SubParsersAction))
+    _render_commands(lines, sub_action, prefix="repro", depth=2)
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def _render_commands(lines: list[str], sub_action: argparse._SubParsersAction,
+                     prefix: str, depth: int) -> None:
     for name, sp in sub_action.choices.items():
-        lines.append(f"## `repro {name}`\n")
+        lines.append(f"{'#' * depth} `{prefix} {name}`\n")
         help_text = next((ca.help for ca in sub_action._choices_actions
                           if ca.dest == name), "")
         if help_text:
             lines.append(f"{help_text[0].upper()}{help_text[1:]}.\n")
         usage = sp.format_usage().replace("usage: ", "").strip()
         lines.append(f"```\n{usage}\n```\n")
-        lines.extend(_render_table(_option_rows(sp)))
+        rows = _option_rows(sp)
+        if rows:
+            lines.extend(_render_table(rows))
         lines.append("")
-    return "\n".join(lines).rstrip() + "\n"
+        nested = next((a for a in sp._actions
+                       if isinstance(a, argparse._SubParsersAction)), None)
+        if nested is not None:
+            _render_commands(lines, nested, f"{prefix} {name}", depth + 1)
 
 
 def main() -> int:

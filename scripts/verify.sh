@@ -13,6 +13,27 @@ echo "== docs: CLI reference drift check =="
 python scripts/gen_cli_docs.py --check
 
 echo
+echo "== lint gate: bundled stencils x machines + machine YAMLs =="
+# every bundled stencil must lint clean (zero errors) against every
+# bundled cache machine, and every machine YAML must validate (M2xx)
+mkdir -p benchmarks/out
+: > benchmarks/out/lint_gate.json
+echo "[" >> benchmarks/out/lint_gate.json
+first=1
+for stencil in src/repro/configs/stencils/*.c; do
+  for machine in src/repro/configs/machines/ivybridge_ep*.yaml; do
+    [[ $first -eq 1 ]] || echo "," >> benchmarks/out/lint_gate.json
+    first=0
+    python -m repro lint "$stencil" -m "$(basename "$machine")" --json \
+      >> benchmarks/out/lint_gate.json \
+      || { echo "lint gate: errors in $stencil x $(basename "$machine")"; exit 1; }
+  done
+done
+echo "]" >> benchmarks/out/lint_gate.json
+python -m repro machine validate \
+  || { echo "lint gate: machine validate failed"; exit 1; }
+
+echo
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 

@@ -160,6 +160,50 @@ def build_parser() -> argparse.ArgumentParser:
                     help="second grid dimension for a 2D blocking search "
                          "(outer symbol bound per row, inner batched)")
 
+    sp = sub.add_parser("lint",
+                        help="static diagnostics: check kernel, machine, "
+                             "and request before any model runs")
+    sp.add_argument("kernel",
+                    help="kernel source: .c file, HLO text/dump, or "
+                         "trace:<module>[:attr] point-function reference")
+    sp.add_argument("-m", "--machine", required=True,
+                    help="machine description: short name (IVY, V5E), "
+                         "bundled yaml name, or path")
+    sp.add_argument("-D", "--define", nargs=2, action="append", default=[],
+                    metavar=("NAME", "VALUE"),
+                    help="bind a symbolic constant (repeatable)")
+    sp.add_argument("--frontend", default=None,
+                    choices=["c", "builder", "trace", "hlo"],
+                    help="force a frontend instead of auto-detection")
+    sp.add_argument("--name", default=None, help="kernel name override")
+    sp.add_argument("-p", "--performance-model", action="append",
+                    default=None, metavar="MODEL",
+                    help="model(s) the vetted request would run "
+                         "(default: ecm for loop kernels, hlo-roofline "
+                         "for HLO dumps)")
+    sp.add_argument("--cache-predictor", default="LC", choices=["LC", "SIM"],
+                    help="traffic predictor the request would use "
+                         "(default LC)")
+    sp.add_argument("--incore", default="simple",
+                    choices=["simple", "ports"],
+                    help="in-core model the request would use "
+                         "(default simple)")
+    sp.add_argument("--json", action="store_true",
+                    help="emit the lint report as JSON")
+    sp.add_argument("--sarif", action="store_true",
+                    help="emit the lint report as SARIF 2.1.0")
+
+    sp = sub.add_parser("machine", help="machine-description utilities")
+    msub = sp.add_subparsers(dest="machine_command", required=True)
+    vp = msub.add_parser("validate",
+                         help="run the machine lint rules (M2xx) over "
+                              "YAML descriptions")
+    vp.add_argument("paths", nargs="*", metavar="PATH",
+                    help="machine YAML files or bundled short names; "
+                         "default: every file in configs/machines/")
+    vp.add_argument("--json", action="store_true",
+                    help="emit one lint report per file as JSON")
+
     sp = sub.add_parser("cache",
                         help="inspect or clear a disk-backed result cache")
     sp.add_argument("action", choices=["stats", "clear"],
@@ -225,8 +269,20 @@ def _print_stats(payload: dict) -> None:
               f" | stale {store['skipped_schema']}")
 
 
+def _preflight(args, machine, kernel, **extra) -> None:
+    """Cross-rule lint (X3xx) before any model runs: request combinations
+    that are individually registered but jointly invalid — blocking on an
+    HLO dump, SIM under --dense — exit 3 with a diagnostic instead of a
+    deep traceback.  Unknown names still raise the ordinary registry
+    ValueError (exit 2)."""
+    from repro.core import lint as lint_mod
+    lint_mod.lint_cross(kernel, machine, predictor=args.cache_predictor,
+                        incore=args.incore, **extra).raise_if_errors()
+
+
 def cmd_analyze(args) -> int:
     machine, kernel = _load(args)
+    _preflight(args, machine, kernel, models=_models(args))
     service = _service(args)
     sess = api.get_session(machine)
     results = []
@@ -271,6 +327,8 @@ def cmd_analyze(args) -> int:
 
 def cmd_sweep(args) -> int:
     machine, kernel = _load(args)
+    _preflight(args, machine, kernel, models=_models(args),
+               compiled=True if args.dense else None)
     service = _service(args)
     start, stop, step = args.range
     values = list(range(start, stop + 1, step))     # STOP inclusive
@@ -303,6 +361,68 @@ def cmd_sweep(args) -> int:
         print()
         _print_stats(_stats_payload(service, sess))
     return 0
+
+
+def cmd_lint(args) -> int:
+    """Static diagnostics over (kernel, machine, request) — exit 0 when
+    clean (warnings allowed), 3 when any error-severity finding exists.
+    Load failures (unparsable C, malformed YAML, trace mismatches) become
+    K100/M200 diagnostics instead of tracebacks."""
+    from repro.core import lint as lint_mod
+    kernel = None
+    try:
+        machine = api.resolve_machine(args.machine)
+    except Exception as e:          # noqa: BLE001 - surfaced as diagnostic
+        report = lint_mod.load_failure(args.machine, e, kind="machine")
+    else:
+        try:
+            kernel = api.load_kernel(args.kernel, frontend=args.frontend,
+                                     name=args.name,
+                                     constants=_constants(args))
+        except Exception as e:      # noqa: BLE001 - surfaced as diagnostic
+            report = lint_mod.load_failure(args.kernel, e, kind="kernel")
+        else:
+            models = args.performance_model or (
+                ["ecm"] if isinstance(kernel, LoopKernel)
+                else ["hlo-roofline"])
+            report = lint_mod.lint_request(
+                kernel, machine, filename=args.kernel, models=models,
+                predictor=args.cache_predictor, incore=args.incore)
+    if args.sarif:
+        print(json.dumps(report.to_sarif(), indent=2, sort_keys=True))
+    elif args.json:
+        print(json.dumps(report.to_dict(), indent=2, sort_keys=True))
+    else:
+        print(report.render())
+    return 3 if report.errors else 0
+
+
+def cmd_machine(args) -> int:
+    """``machine validate``: the machine rule family (M2xx) over explicit
+    paths or every bundled description; exit 3 if any file has errors."""
+    from repro.core import lint as lint_mod
+    from repro.core.machine import _MACHINE_DIR
+    paths = list(args.paths) or sorted(
+        p.name for p in _MACHINE_DIR.glob("*.yaml"))
+    rc = 0
+    linted = []
+    for p in paths:
+        try:
+            m = api.resolve_machine(p)
+        except Exception as e:      # noqa: BLE001 - surfaced as diagnostic
+            rep = lint_mod.load_failure(str(p), e, kind="machine")
+        else:
+            rep = lint_mod.lint_machine(m, filename=str(p))
+        if rep.errors:
+            rc = 3
+        linted.append((str(p), rep))
+    if args.json:
+        print(json.dumps([{"file": p, **rep.to_dict()}
+                          for p, rep in linted], indent=2, sort_keys=True))
+        return rc
+    for _, rep in linted:
+        print(rep.render())
+    return rc
 
 
 def cmd_cache(args) -> int:
@@ -365,11 +485,8 @@ def _cmd_blocking_grid(args, machine, kernel) -> int:
 
 def cmd_blocking(args) -> int:
     machine, kernel = _load(args)
-    if not isinstance(kernel, LoopKernel):
-        raise TypeError(
-            "blocking analyzes symbolic loop kernels; "
-            f"{args.kernel!r} loaded as {type(kernel).__name__} "
-            "(use a c/builder/trace source)")
+    _preflight(args, machine, kernel, models=[args.performance_model],
+               operation="blocking")
     if args.grid2 is not None and args.grid is None:
         raise ValueError("--grid2 needs --grid for the first dimension")
     if args.grid is not None:
@@ -394,9 +511,15 @@ def cmd_blocking(args) -> int:
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    from repro.core.lint import LintError
     try:
         return {"analyze": cmd_analyze, "sweep": cmd_sweep,
-                "blocking": cmd_blocking, "cache": cmd_cache}[args.command](args)
+                "blocking": cmd_blocking, "lint": cmd_lint,
+                "machine": cmd_machine,
+                "cache": cmd_cache}[args.command](args)
+    except LintError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 3
     except (ValueError, TypeError, FileNotFoundError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2

@@ -9,7 +9,7 @@
 # PerformanceModel registry, session.py the memoizing AnalysisSession, and
 # api.py the one analyze() entry point tying them together.
 from . import (blocking, c_parser, cachesim, compiled, ecm, frontends,
-               identity, incore, kernel_ir, layer_conditions, machine,
+               identity, incore, kernel_ir, layer_conditions, lint, machine,
                model_api, predictors, reports, roofline, session)  # noqa: F401
 from . import api, hlo_analysis  # noqa: F401
 
@@ -22,7 +22,10 @@ from .frontends import (FRONTEND_REGISTRY, HLOProgram,  # noqa: F401
                         register_frontend, resolve_frontend, trace_kernel)
 from .incore import (INCORE_REGISTRY, InCoreModel,  # noqa: F401
                      InCoreResult, register_incore, resolve_incore)
-from .kernel_ir import FlopCount, LoopKernel  # noqa: F401
+from .kernel_ir import FlopCount, LoopKernel, SourceSpan  # noqa: F401
+from .lint import (RULE_REGISTRY, Diagnostic, LintedResult,  # noqa: F401
+                   LintError, LintReport, LintRule, lint_kernel,
+                   lint_machine, lint_request, register_rule, resolve_rule)
 from .machine import Machine, load as load_machine  # noqa: F401
 from .model_api import (MODEL_REGISTRY, PerformanceModel,  # noqa: F401
                         resolve_model)

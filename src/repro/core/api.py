@@ -87,11 +87,37 @@ def _load_kernel_cached(source, frontend, name, constants, frontend_opts):
     return kernel
 
 
+#: Accepted values for ``analyze(..., lint=)`` / ``sweep(..., lint=)``.
+LINT_MODES = ("off", "warn", "error")
+
+
+def _lint_gate(kernel, mach: Machine, mode: str, **request):
+    """The pre-compute lint pass behind ``lint="warn"|"error"``: run all
+    rule families over the loaded kernel + machine + request, raise
+    :class:`~repro.core.lint.LintError` for mode ``"error"`` when any
+    error-severity finding exists, and hand the report back so results
+    can carry it (``LintedResult``)."""
+    if mode not in LINT_MODES:
+        raise ValueError(
+            f"unknown lint mode {mode!r}; expected one of {list(LINT_MODES)}")
+    if mode == "off":
+        return None
+    from . import lint as lint_mod
+    report = lint_mod.lint_request(
+        kernel, mach,
+        filename=getattr(kernel, "source_path", "")
+        or getattr(kernel, "name", ""),
+        **request)
+    if mode == "error":
+        report.raise_if_errors()
+    return report
+
+
 def analyze(source: Any, machine: Machine | str, model: str = "ecm",
             predictor: str = "LC", *, frontend: str | None = None,
             name: str | None = None, constants: dict | None = None,
             cores: int = 1, sim_kwargs: dict | None = None,
-            incore: str = "simple",
+            incore: str = "simple", lint: str = "off",
             session: AnalysisSession | None = None,
             service=None,
             frontend_opts: dict | None = None, **opts) -> Result:
@@ -110,6 +136,14 @@ def analyze(source: Any, machine: Machine | str, model: str = "ecm",
     own memoizing session instead of the pooled per-machine one, or
     ``service=`` (an :class:`repro.service.AnalysisService`) to serve the
     request through the disk-backed, coalescing service tier instead.
+
+    ``lint`` runs the static diagnostics pass (:mod:`repro.core.lint`)
+    before any model computes: ``"error"`` raises
+    :class:`~repro.core.lint.LintError` on error-severity findings,
+    ``"warn"`` (and ``"error"`` with only warnings) returns a
+    ``LintedResult`` whose ``to_dict()`` carries the findings under a
+    ``"diagnostics"`` key — every modeled number stays bit-for-bit
+    identical to ``lint="off"`` (the default).
     """
     if service is not None:
         if session is not None:
@@ -118,17 +152,24 @@ def analyze(source: Any, machine: Machine | str, model: str = "ecm",
                                frontend=frontend, name=name,
                                constants=constants, cores=cores,
                                sim_kwargs=sim_kwargs, incore=incore,
-                               frontend_opts=frontend_opts, **opts)
+                               lint=lint, frontend_opts=frontend_opts,
+                               **opts)
     mach = resolve_machine(machine)
     kernel = _load_kernel_cached(source, frontend, name, constants,
                                  frontend_opts)
+    report = _lint_gate(kernel, mach, lint, model=model,
+                        predictor=predictor, incore=incore)
     sess = session if session is not None else get_session(mach)
     if sess.machine.name != mach.name:
         raise ValueError(
             f"session is bound to machine {sess.machine.name!r}, "
             f"not {mach.name!r}")
-    return sess.analyze(kernel, model, predictor=predictor, cores=cores,
-                        sim_kwargs=sim_kwargs, incore=incore, **opts)
+    res = sess.analyze(kernel, model, predictor=predictor, cores=cores,
+                       sim_kwargs=sim_kwargs, incore=incore, **opts)
+    if report is not None:
+        from .lint import LintedResult
+        return LintedResult(res, report)
+    return res
 
 
 def sweep(source: Any, machine: Machine | str, param: str, values,
@@ -136,6 +177,7 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
           frontend: str | None = None, name: str | None = None,
           constants: dict | None = None, cores: int = 1,
           sim_kwargs: dict | None = None, incore: str = "simple",
+          lint: str = "off",
           session: AnalysisSession | None = None,
           service=None, workers: int = 0,
           frontend_opts: dict | None = None,
@@ -153,7 +195,9 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
     through an :class:`repro.service.AnalysisService` (disk cache +
     coalescing); ``workers > 1`` shards the grid across a process pool
     (:func:`repro.service.sweep_sharded`, the CLI's ``--workers``) —
-    both produce ``to_dict``-identical results."""
+    both produce ``to_dict``-identical results.  ``lint`` behaves as in
+    :func:`analyze`: the report is computed once for the whole sweep and
+    attached to every returned result."""
     if service is not None:
         if session is not None:
             raise ValueError("pass either session= or service=, not both")
@@ -161,23 +205,39 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
                              predictor=predictor, frontend=frontend,
                              name=name, constants=constants, cores=cores,
                              sim_kwargs=sim_kwargs, incore=incore,
-                             frontend_opts=frontend_opts,
+                             lint=lint, frontend_opts=frontend_opts,
                              compiled=compiled, workers=workers, **opts)
     mach = resolve_machine(machine)
     kernel = _load_kernel_cached(source, frontend, name, constants,
                                  frontend_opts)
+    report = _lint_gate(kernel, mach, lint, models=list(models),
+                        predictor=predictor, incore=incore,
+                        compiled=compiled)
     if workers and workers > 1:
         from repro.service.workers import sweep_sharded
-        return sweep_sharded(kernel, mach, param, values, models=models,
-                             predictor=predictor, cores=cores,
-                             sim_kwargs=sim_kwargs, incore=incore,
-                             compiled=compiled, workers=workers, opts=opts)
+        out = sweep_sharded(kernel, mach, param, values, models=models,
+                            predictor=predictor, cores=cores,
+                            sim_kwargs=sim_kwargs, incore=incore,
+                            compiled=compiled, workers=workers, opts=opts)
+        return _attach_report(out, report)
     sess = session if session is not None else get_session(mach)
     if sess.machine.name != mach.name:
         raise ValueError(
             f"session is bound to machine {sess.machine.name!r}, "
             f"not {mach.name!r}")
-    return sess.sweep(kernel, param, values, models=models,
-                      predictor=predictor, cores=cores,
-                      sim_kwargs=sim_kwargs, incore=incore,
-                      compiled=compiled, **opts)
+    out = sess.sweep(kernel, param, values, models=models,
+                     predictor=predictor, cores=cores,
+                     sim_kwargs=sim_kwargs, incore=incore,
+                     compiled=compiled, **opts)
+    return _attach_report(out, report)
+
+
+def _attach_report(out: dict, report) -> dict:
+    """Wrap every sweep result in a ``LintedResult`` carrying ``report``
+    (sweep payloads stay pure on the cache/store paths; wrapping happens
+    on the way out)."""
+    if report is None:
+        return out
+    from .lint import LintedResult
+    return {m: [LintedResult(r, report) for r in rs]
+            for m, rs in out.items()}

@@ -18,7 +18,7 @@ import re
 
 import sympy
 
-from .kernel_ir import Access, Array, FlopCount, Loop, LoopKernel
+from .kernel_ir import Access, Array, FlopCount, Loop, LoopKernel, SourceSpan
 from .kernel_ir import sympify_ids as _sympify_ids_raw
 
 _TOKEN_RE = re.compile(r"""
@@ -54,27 +54,59 @@ def _sympify_ids(s: str) -> sympy.Expr:
     return sympy.expand(expr)
 
 
-def _tokenize(src: str) -> list[str]:
-    # strip // and /* */ comments
-    src = re.sub(r"//[^\n]*", " ", src)
-    src = re.sub(r"/\*.*?\*/", " ", src, flags=re.S)
-    toks, pos = [], 0
+def _blank(m: re.Match) -> str:
+    # replace a comment with same-length whitespace, newlines kept, so
+    # token offsets (and the line/col spans built from them) stay true
+    return re.sub(r"\S", " ", m.group())
+
+
+def _tokenize_spans(src: str) -> tuple[list[str], list[tuple[int, int]]]:
+    """Tokenize, also returning each token's 1-based (line, col)."""
+    src = re.sub(r"//[^\n]*", _blank, src)
+    src = re.sub(r"/\*.*?\*/", _blank, src, flags=re.S)
+    line_starts = [0]
+    for i, ch in enumerate(src):
+        if ch == "\n":
+            line_starts.append(i + 1)
+    toks: list[str] = []
+    spans: list[tuple[int, int]] = []
+    pos, line = 0, 0
     while pos < len(src):
         m = _TOKEN_RE.match(src, pos)
         if not m:
             raise ParseError(f"unexpected character {src[pos]!r} at {pos}")
-        pos = m.end()
+        while line + 1 < len(line_starts) and line_starts[line + 1] <= pos:
+            line += 1
         if m.lastgroup != "ws":
             toks.append(m.group())
-    return toks
+            spans.append((line + 1, pos - line_starts[line] + 1))
+        pos = m.end()
+    return toks, spans
+
+
+def _tokenize(src: str) -> list[str]:
+    return _tokenize_spans(src)[0]
 
 
 class _Parser:
-    def __init__(self, toks: list[str]):
+    def __init__(self, toks: list[str],
+                 spans: list[tuple[int, int]] | None = None,
+                 source_path: str = ""):
         self.toks = toks
+        self.spans = spans
+        self.source_path = source_path
         self.i = 0
 
     # -- token helpers -------------------------------------------------
+    def span(self, k: int = 0) -> SourceSpan | None:
+        """Source span of the token ``k`` ahead of the cursor (None when
+        the parser was built without position data)."""
+        if not self.spans:
+            return None
+        j = min(self.i + k, len(self.spans) - 1)
+        line, col = self.spans[j]
+        return SourceSpan(line=line, col=col, path=self.source_path)
+
     def peek(self, k: int = 0) -> str | None:
         j = self.i + k
         return self.toks[j] if j < len(self.toks) else None
@@ -128,6 +160,7 @@ class _Parser:
             f, r = self._add(arrays, scalars)
             self.expect(")")
             return f, r
+        sp = self.span()
         t = self.next()
         if re.fullmatch(r"\d+\.?\d*[fF]?|\.\d+[fF]?|\d+[fF]", t) or t.isdigit():
             return FlopCount(), []
@@ -147,7 +180,7 @@ class _Parser:
                 if len(arrays[t].dims) != 1:
                     raise ParseError(f"{t}: {len(idx)} subscripts for "
                                      f"{len(arrays[t].dims)}-D array")
-            return FlopCount(), [(t, tuple(idx))]
+            return FlopCount(), [(t, tuple(idx), sp)]
         if t in arrays:
             raise ParseError(f"array {t!r} used without subscript")
         return FlopCount(), []   # scalar read: register resident
@@ -170,9 +203,16 @@ class _Parser:
 
 
 def parse_kernel(src: str, name: str = "kernel",
-                 constants: dict[str, int] | None = None) -> LoopKernel:
-    """Parse a paper-style C99 kernel into a :class:`LoopKernel`."""
-    p = _Parser(_tokenize(src))
+                 constants: dict[str, int] | None = None,
+                 source_path: str = "") -> LoopKernel:
+    """Parse a paper-style C99 kernel into a :class:`LoopKernel`.
+
+    ``source_path`` (when the text came from a file) is recorded on the
+    kernel and in every loop/access :class:`SourceSpan` so diagnostics
+    can point at the offending source line.
+    """
+    toks, spans = _tokenize_spans(src)
+    p = _Parser(toks, spans, source_path=source_path)
     arrays: dict[str, Array] = {}
     scalars: set[str] = set()
     dtype_bytes = 8
@@ -221,6 +261,7 @@ def parse_kernel(src: str, name: str = "kernel",
     # --- loop nest ------------------------------------------------------
     loops: list[Loop] = []
     while p.peek() == "for":
+        loop_span = p.span()
         p.next()
         p.expect("(")
         while (p.peek() in ("int", "long", "unsigned", "size_t")
@@ -264,16 +305,17 @@ def parse_kernel(src: str, name: str = "kernel",
             raise ParseError(f"unsupported increment {inc!r}")
         p.expect(")")
         p.expect("{")
-        loops.append(Loop(var, start, stop, step))
+        loops.append(Loop(var, start, stop, step, span=loop_span))
 
     if not loops:
         raise ParseError("no loop nest found")
 
     # --- body statements ------------------------------------------------
     flops = FlopCount()
-    reads: list[tuple[str, tuple]] = []
-    writes: list[tuple[str, tuple]] = []
+    reads: list[tuple[str, tuple, SourceSpan | None]] = []
+    writes: list[tuple[str, tuple, SourceSpan | None]] = []
     while p.peek() not in ("}", None):
+        lhs_span = p.span()
         t = p.next()
         if t in ("if", "while", "switch"):
             raise ParseError(f"{t!r} not allowed in kernel body (paper §2.1)")
@@ -292,7 +334,7 @@ def parse_kernel(src: str, name: str = "kernel",
         if op in ("+=", "-=", "*=", "/="):
             # a[i] += expr  implies read+write of a[i] and one add/mul
             if lhs_idx is not None:
-                reads.append((lhs_name, lhs_idx))
+                reads.append((lhs_name, lhs_idx, lhs_span))
             flops = flops + (FlopCount(add=1) if op in ("+=", "-=") else
                              FlopCount(mul=1) if op == "*=" else FlopCount(div=1))
         elif op != "=":
@@ -302,7 +344,7 @@ def parse_kernel(src: str, name: str = "kernel",
         flops = flops + f
         reads += r
         if lhs_idx is not None:
-            writes.append((lhs_name, lhs_idx))
+            writes.append((lhs_name, lhs_idx, lhs_span))
         else:
             scalars.add(lhs_name)
     # close braces
@@ -312,19 +354,20 @@ def parse_kernel(src: str, name: str = "kernel",
     # --- build IR: dedupe identical refs (register reuse within one iter) --
     accesses: list[Access] = []
     seen: set[tuple] = set()
-    for nm, idx in reads:
+    for nm, idx, sp in reads:
         key = (nm, idx, False)
         if key in seen:
             continue
         seen.add(key)
-        accesses.append(Access(arrays[nm], idx, is_write=False))
-    for nm, idx in writes:
+        accesses.append(Access(arrays[nm], idx, is_write=False, span=sp))
+    for nm, idx, sp in writes:
         key = (nm, idx, True)
         if key in seen:
             continue
         seen.add(key)
-        accesses.append(Access(arrays[nm], idx, is_write=True))
+        accesses.append(Access(arrays[nm], idx, is_write=True, span=sp))
 
     return LoopKernel(loops=loops, accesses=accesses, flops=flops,
                       arrays=arrays, constants=dict(constants or {}),
-                      dtype_bytes=dtype_bytes, name=name, source=src)
+                      dtype_bytes=dtype_bytes, name=name, source=src,
+                      source_path=source_path)

@@ -35,7 +35,7 @@ class CFrontend(KernelFrontend):
              constants: dict | None = None, **opts):
         if opts:
             raise TypeError(f"c frontend got unknown options {sorted(opts)}")
-        text, default_name = source, "kernel"
+        text, default_name, source_path = source, "kernel", ""
         if isinstance(source, pathlib.Path) or (
                 isinstance(source, str) and "\n" not in source
                 and source.endswith(".c")):
@@ -46,5 +46,7 @@ class CFrontend(KernelFrontend):
                     "(tried cwd and the bundled configs/stencils)")
             text = path.read_text()
             default_name = path.stem
+            source_path = str(path)
         return c_parser.parse_kernel(text, name=name or default_name,
-                                     constants=constants)
+                                     constants=constants,
+                                     source_path=source_path)

@@ -37,6 +37,32 @@ def sympify_ids(s) -> sympy.Expr:
 
 
 @dataclasses.dataclass(frozen=True)
+class SourceSpan:
+    """Where an IR node came from in its source text (1-based line/col).
+
+    Attached by the C front end so diagnostics (:mod:`repro.core.lint`)
+    can point at the offending source; builder/trace kernels carry no
+    spans and diagnostics fall back to the kernel name.  Spans are
+    metadata: they never enter structural identity
+    (:mod:`repro.core.identity`) or dataclass equality.
+    """
+    line: int
+    col: int
+    path: str = ""
+
+    def label(self, fallback: str = "<kernel>") -> str:
+        return f"{self.path or fallback}:{self.line}:{self.col}"
+
+    def to_dict(self) -> dict:
+        return {"line": self.line, "col": self.col, "path": self.path}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SourceSpan":
+        return cls(line=int(d["line"]), col=int(d["col"]),
+                   path=str(d.get("path", "")))
+
+
+@dataclasses.dataclass(frozen=True)
 class Array:
     name: str
     dims: tuple[sympy.Expr, ...]        # e.g. (M, N, N); may contain symbols
@@ -64,6 +90,9 @@ class Access:
     array: Array
     index: tuple[sympy.Expr, ...]       # affine exprs over loop vars
     is_write: bool = False
+    # source location metadata; excluded from equality/hash so spans never
+    # perturb structural identity or the memoizing caches keyed on it
+    span: SourceSpan | None = dataclasses.field(default=None, compare=False)
 
     def offset(self) -> sympy.Expr:
         """Flattened 1-D offset in elements (paper §2.4.2 uses these)."""
@@ -79,6 +108,7 @@ class Loop:
     start: sympy.Expr
     stop: sympy.Expr                    # exclusive upper bound
     step: int = 1
+    span: SourceSpan | None = dataclasses.field(default=None, compare=False)
 
     @property
     def trip_count(self) -> sympy.Expr:
@@ -118,6 +148,7 @@ class LoopKernel:
     dtype_bytes: int = 8
     name: str = "kernel"
     source: str = ""
+    source_path: str = ""               # where `source` was read from, if known
 
     # ------------------------------------------------------------------
     @property

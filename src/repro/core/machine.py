@@ -278,6 +278,10 @@ class Machine:
         _check_keys(d, _TOP_LEVEL_KEYS, "machine-description")
         levels = []
         for lv in d.get("memory hierarchy", []):
+            if not isinstance(lv, dict) or "level" not in lv:
+                raise ValueError(
+                    "every 'memory hierarchy' entry needs a 'level' name; "
+                    f"got {lv!r}")
             cpg = lv.get("cache per group", {})
             size = cpg.get("size")
             if size is None and cpg:
@@ -349,7 +353,21 @@ class Machine:
         if not path.exists() and not path.is_absolute():
             path = _MACHINE_DIR / path
         with open(path) as f:
-            return cls.from_dict(yaml.safe_load(f))
+            try:
+                d = yaml.safe_load(f)
+            except yaml.YAMLError as e:
+                raise ValueError(
+                    f"machine file {path} is not valid YAML: {e}") from e
+        if not isinstance(d, dict):
+            raise ValueError(
+                f"machine file {path} must hold a YAML mapping, "
+                f"got {type(d).__name__}")
+        try:
+            return cls.from_dict(d)
+        except (KeyError, TypeError) as e:
+            raise ValueError(
+                f"machine file {path} is malformed: "
+                f"{type(e).__name__}: {e}") from e
 
 
 @functools.lru_cache(maxsize=64)

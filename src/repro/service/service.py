@@ -220,19 +220,76 @@ class AnalysisService:
         self._flight.finish(key, fut, result=value)
         return value
 
+    def lint_report(self, kernel, mach: Machine, **request):
+        """The store-backed lint pass behind ``analyze(..., lint=...)``:
+        reports are cached like results (kind ``"lint"``), so a warm hit
+        replays its diagnostics from disk without re-running a single
+        rule."""
+        from repro.core import lint as lint_mod
+
+        def run():
+            return lint_mod.lint_request(
+                kernel, mach,
+                filename=getattr(kernel, "source_path", "")
+                or getattr(kernel, "name", ""),
+                **request)
+
+        try:
+            key = ("lint", source_key(kernel), mach.fingerprint,
+                   freeze(request))
+        except (TypeError, ValueError):
+            return run()                    # unkeyable source: just run
+
+        def decode(payload):
+            try:
+                return lint_mod.LintReport.from_dict(payload)
+            except (KeyError, TypeError, ValueError):
+                return None                 # foreign/corrupt -> recompute
+
+        def compute():
+            rep = run()
+            meta = {"kind": "lint", "machine": mach.name,
+                    "machine_fingerprint": mach.fingerprint,
+                    "kernel": getattr(kernel, "name",
+                                      type(kernel).__name__),
+                    "errors": len(rep.errors),
+                    "warnings": len(rep.warnings)}
+            return rep, rep.to_dict(), meta
+
+        return self._serve(key, compute, decode, None)
+
+    def _lint_gate(self, kernel, mach: Machine, mode: str, **request):
+        """Validate ``mode`` and produce the (possibly replayed) report;
+        raises :class:`~repro.core.lint.LintError` in error mode."""
+        if mode not in _api.LINT_MODES:
+            raise ValueError(
+                f"unknown lint mode {mode!r}; expected one of "
+                f"{list(_api.LINT_MODES)}")
+        if mode == "off":
+            return None
+        report = self.lint_report(kernel, mach, **request)
+        if mode == "error":
+            report.raise_if_errors()
+        return report
+
     # -- the request API -----------------------------------------------
     def analyze(self, source: Any, machine: Machine | str,
                 model: str = "ecm", predictor: str = "LC", *,
                 frontend: str | None = None, name: str | None = None,
                 constants: dict | None = None, cores: int = 1,
                 sim_kwargs: dict | None = None, incore: str = "simple",
+                lint: str = "off",
                 frontend_opts: dict | None = None, **opts) -> Result:
         """Serve one analysis request (same surface as
         :func:`repro.core.api.analyze`).  Memory hits return the cached
         object in microseconds; disk hits deserialize the stored payload
-        and seed the pooled session; misses compute, then publish."""
+        and seed the pooled session; misses compute, then publish.
+        ``lint`` behaves as in the core API, except the report itself is
+        served through the same three tiers (kind ``"lint"``)."""
         mach = _api.resolve_machine(machine)
         kernel = self._load(source, frontend, name, constants, frontend_opts)
+        report = self._lint_gate(kernel, mach, lint, model=model,
+                                 predictor=predictor, incore=incore)
         sess = self.session(mach)
         key = self._analyze_key(kernel, mach, sess, model, predictor,
                                 cores, sim_kwargs, incore, opts)
@@ -252,13 +309,18 @@ class AnalysisService:
             return res, res.to_dict(), self._meta(
                 "analyze", mach, kernel, model, predictor, incore)
 
-        return self._serve(key, compute, decode, None)
+        res = self._serve(key, compute, decode, None)
+        if report is not None:
+            from repro.core.lint import LintedResult
+            return LintedResult(res, report)
+        return res
 
     def sweep(self, source: Any, machine: Machine | str, param: str,
               values, models=("ecm",), predictor: str = "LC", *,
               frontend: str | None = None, name: str | None = None,
               constants: dict | None = None, cores: int = 1,
               sim_kwargs: dict | None = None, incore: str = "simple",
+              lint: str = "off",
               frontend_opts: dict | None = None,
               compiled: bool | str = "auto", workers: int = 0,
               **opts) -> dict[str, list[Result]]:
@@ -275,8 +337,11 @@ class AnalysisService:
         """
         mach = _api.resolve_machine(machine)
         kernel = self._load(source, frontend, name, constants, frontend_opts)
-        sess = self.session(mach)
         model_names = [str(m) for m in models]
+        report = self._lint_gate(kernel, mach, lint, models=model_names,
+                                 predictor=predictor, incore=incore,
+                                 compiled=compiled)
+        sess = self.session(mach)
         values = list(values)
         key = ("sweep", tuple(resolve_model(m).name for m in model_names),
                source_key(kernel), mach.fingerprint, str(param),
@@ -315,7 +380,8 @@ class AnalysisService:
             meta["points"] = len(values)
             return out, payload, meta
 
-        return self._serve(key, compute, decode, None)
+        out = self._serve(key, compute, decode, None)
+        return _api._attach_report(out, report)
 
     # -- batch APIs ----------------------------------------------------
     def _ensure_pool(self) -> ThreadPoolExecutor:

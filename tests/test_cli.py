@@ -159,11 +159,13 @@ def test_sim_backend_header_in_text_report(capsys):
 
 
 def test_blocking_rejects_hlo_source(tmp_path, capsys):
-    """blocking on an HLO dump must produce the clean exit-2 error path,
-    not an AttributeError traceback."""
+    """blocking on an HLO dump routes through the lint cross-rules
+    (X304) and exits 3 with a diagnostic, not an AttributeError
+    traceback."""
     p = tmp_path / "toy.hlo"
     p.write_text("HloModule m\n\nENTRY %main (p: f32[8]) -> f32[8] {\n"
                  "  ROOT %p = f32[8]{0} parameter(0)\n}\n")
     rc, _, err = run_cli(["blocking", str(p), "-m", "IVY"], capsys)
-    assert rc == 2
+    assert rc == 3
+    assert "X304" in err
     assert "blocking analyzes symbolic loop kernels" in err

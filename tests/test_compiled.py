@@ -363,11 +363,14 @@ class TestCLI:
         assert len(json.loads(dense)["ecm"]) == 8
 
     def test_sweep_dense_rejects_sim(self, capsys):
+        """SIM + --dense routes through the lint cross-rules (X303) and
+        exits 3 with a diagnostic instead of a deep CompileError."""
         rc, _, err = run_cli(
             ["sweep", "configs/stencils/stencil_2d5pt.c", "-m", "IVY",
              "--param", "N", "--range", "40", "80", "10", "-D", "M", "20",
              "--cache-predictor", "SIM", "--dense"], capsys)
-        assert rc == 2
+        assert rc == 3
+        assert "X303" in err
         assert "no analytic closed form" in err
 
     def test_blocking_grid_text_and_json(self, capsys):

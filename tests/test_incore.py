@@ -468,10 +468,11 @@ class TestEndToEnd:
         assert d["incore_model"] == "ports"
         assert d["incore"]["port_occupation"]["P1"] == pytest.approx(12.0)
 
-    def test_cli_ports_without_table_exits_2(self, tmp_path, capsys):
+    def test_cli_ports_without_table_exits_3(self, tmp_path, capsys):
         from repro import cli
         # a machine file without a ports table: --incore ports must fail
-        # cleanly (exit 2 + message), not traceback
+        # cleanly through the lint cross-rules (exit 3 + X306 diagnostic),
+        # not traceback
         src = pathlib.Path("src/repro/configs/machines/ivybridge_ep.yaml")
         text = "\n".join(
             line for line in src.read_text().splitlines()
@@ -490,5 +491,5 @@ class TestEndToEnd:
                        "-m", str(f), "-p", "ecm", "--incore", "ports",
                        "-D", "M", "30", "-D", "N", "40"])
         err = capsys.readouterr().err
-        assert rc == 2
-        assert "ports" in err
+        assert rc == 3
+        assert "X306" in err and "ports" in err

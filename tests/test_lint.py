@@ -1,0 +1,431 @@
+"""Lint subsystem (ISSUE 7): pinned rule codes over hand-broken kernels
+and machine files, clean verdicts on the paper stencils, the
+``analyze()/sweep(..., lint=)`` wiring (bit-for-bit parity with
+``lint="off"``), service warm-hit replay of stored diagnostics, the
+``lint`` / ``machine validate`` CLI surface, and the LC-safety soundness
+property (lint's LC verdict vs actual LC/SIM volume agreement)."""
+import dataclasses
+import json
+import pathlib
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
+
+from test_cachesim_vector import _star2d, _star3d
+
+from repro import cli
+from repro.core import (LintError, analyze, layer_conditions, load_machine,
+                        parse_kernel, sweep)
+from repro.core.kernel_ir import FlopCount, make_stencil
+from repro.core.lint import (LC_UNSAFE_CODES, Diagnostic, LintReport,
+                             RULE_REGISTRY, clear_report_cache, lc_safe,
+                             lint_kernel, lint_machine, lint_request,
+                             load_failure, run_lint)
+from repro.core.predictors import predict_volumes
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+STENCILS = ROOT / "src" / "repro" / "configs" / "stencils"
+MACHINES = ROOT / "src" / "repro" / "configs" / "machines"
+PAPER_STENCILS = ["stencil_2d5pt.c", "stencil_3d7pt.c",
+                  "stencil_3d_long_range.c"]
+
+
+def run_cli(argv, capsys):
+    rc = cli.main(argv)
+    cap = capsys.readouterr()
+    return rc, cap.out, cap.err
+
+
+@pytest.fixture(scope="module")
+def ivy():
+    return load_machine("IVY")
+
+
+# ----------------------------------------------------------------------
+class TestRegistry:
+    def test_three_families_registered(self):
+        fams = {r.family for r in RULE_REGISTRY.values()}
+        assert fams == {"kernel", "machine", "cross"}
+        assert all(c == r.code for c, r in RULE_REGISTRY.items())
+
+    def test_report_is_severity_sorted_and_stable(self, ivy):
+        src = "double a[N];\nfor (int i = 0; i < N; i++) {\n  a[i*i] = a[i];\n}\n"
+        k = parse_kernel(src, name="bad")
+        rep = lint_kernel(k, ivy)
+        sevs = [d.severity for d in rep.diagnostics]
+        assert sevs == sorted(sevs, key=("error", "warning",
+                                         "info").index)
+        # memoized: same kernel/machine returns the identical report
+        assert lint_kernel(k, ivy) is rep
+
+
+# ----------------------------------------------------------------------
+class TestKernelRules:
+    def test_non_affine_subscript_k101(self, ivy):
+        src = "double a[N];\nfor (int i = 0; i < N; i++) {\n  a[i] = a[i*i];\n}\n"
+        rep = lint_kernel(parse_kernel(src, name="sq"), ivy)
+        assert "K101" in rep.codes() and not rep.ok()
+        d = next(d for d in rep.diagnostics if d.code == "K101")
+        assert d.severity == "error" and "affine" in d.message
+
+    def test_data_dependent_subscript_k102(self, ivy):
+        src = "double a[N];\ndouble b[N];\n" \
+              "for (int i = 0; i < N; i++) {\n  b[i] = a[i + q];\n}\n"
+        rep = lint_kernel(parse_kernel(src, name="dd"), ivy)
+        assert "K102" in rep.codes() and not rep.ok()
+        assert "q" in next(d for d in rep.diagnostics
+                           if d.code == "K102").message
+
+    def test_out_of_bounds_k103_with_span(self, ivy):
+        src = "double a[N];\ndouble b[N];\n" \
+              "for (int i = 0; i < N; i++) {\n  b[i] = a[i + 1];\n}\n"
+        rep = lint_kernel(parse_kernel(src, name="oob"), ivy)
+        assert "K103" in rep.codes()
+        d = next(d for d in rep.diagnostics if d.code == "K103")
+        assert "by 1" in d.message
+        assert d.span is not None and d.span.line == 4   # points at a[i+1]
+
+    def test_in_bounds_stencil_has_no_k103(self, ivy):
+        # i < N-1 with extent N: tight but legal on both sides
+        src = (STENCILS / "stencil_2d5pt.c").read_text()
+        rep = lint_kernel(parse_kernel(src, name="5pt"), ivy)
+        assert "K103" not in rep.codes()
+
+    def test_reduction_k105_suggests_ports(self, ivy):
+        src = "double s[1];\ndouble a[N];\n" \
+              "for (int i = 0; i < N; i++) {\n  s[0] = s[0] + a[i];\n}\n"
+        rep = lint_kernel(parse_kernel(src, name="red"), ivy)
+        d = next(d for d in rep.diagnostics if d.code == "K105")
+        assert d.severity == "warning"
+        assert "--incore ports" in d.suggestion
+
+    def test_way_size_multiple_k106_suggests_sim(self, ivy):
+        k = _star2d(1, 1024)       # row = 8192 B, L1 way size = 4096 B
+        rep = lint_kernel(k, ivy)
+        ds = [d for d in rep.diagnostics if d.code == "K106"]
+        assert ds and all(d.severity == "warning" for d in ds)
+        assert any("SIM" in d.suggestion for d in ds)
+        assert not lc_safe(rep)
+
+    def test_compiled_eligibility_k107_info(self, ivy):
+        src = (STENCILS / "stencil_3d7pt.c").read_text()
+        rep = lint_kernel(parse_kernel(src, name="7pt"), ivy)
+        d = next(d for d in rep.diagnostics if d.code == "K107")
+        assert d.severity == "info" and "M, N" in d.message
+        # binding the sizes clears it
+        rep2 = lint_kernel(parse_kernel(src, name="7pt",
+                                        constants={"M": 30, "N": 50}), ivy)
+        assert "K107" not in rep2.codes()
+
+    @pytest.mark.parametrize("fname", PAPER_STENCILS)
+    def test_paper_stencils_zero_errors(self, fname, ivy):
+        """Acceptance: the three paper stencils lint clean on IVY."""
+        k = parse_kernel((STENCILS / fname).read_text(), name=fname)
+        rep = lint_request(k, ivy, models=["ecm"], predictor="LC",
+                           incore="simple")
+        assert rep.ok(), rep.render()
+        assert not rep.warnings, rep.render()
+
+
+# ----------------------------------------------------------------------
+class TestMachineRules:
+    @pytest.mark.parametrize("name", ["IVY", "IVY122", "V5E"])
+    def test_bundled_machines_clean(self, name):
+        rep = lint_machine(load_machine(name))
+        assert rep.ok() and not rep.warnings, rep.render()
+
+    def test_geometry_mismatch_m202(self, tmp_path):
+        src = (MACHINES / "ivybridge_ep.yaml").read_text()
+        broken = src.replace(
+            "{sets: 64, ways: 8, cl_size: 64}",
+            "{sets: 64, ways: 8, cl_size: 64, size: 48 kB}")
+        assert broken != src
+        p = tmp_path / "broken_geom.yaml"
+        p.write_text(broken)
+        from repro.core.machine import Machine
+        rep = lint_machine(Machine.from_yaml(p), filename=str(p))
+        assert "M202" in [d.code for d in rep.errors]
+
+    def test_shrunk_hierarchy_m202(self, tmp_path):
+        src = (MACHINES / "ivybridge_ep.yaml").read_text()
+        p = tmp_path / "broken_order.yaml"
+        p.write_text(src.replace("sets: 512", "sets: 32"))  # L2 < L1
+        from repro.core.machine import Machine
+        rep = lint_machine(Machine.from_yaml(p), filename=str(p))
+        assert any(d.code == "M202" and "not larger" in d.message
+                   for d in rep.errors)
+
+    def test_missing_ports_entry_m203_m204(self, ivy):
+        ports = ivy.ports
+        entries = {k: v for k, v in ports.entries.items() if k != "MUL"}
+        broken = dataclasses.replace(
+            ivy, ports=dataclasses.replace(ports, entries=entries))
+        rep = lint_machine(broken)
+        codes = [d.code for d in rep.errors]
+        assert "M203" in codes and "M204" in codes
+        d = next(d for d in rep.diagnostics if d.code == "M203")
+        assert "add a ports entry for MUL" in d.suggestion
+
+    def test_no_ports_table_is_info_not_error(self, ivy):
+        rep = lint_machine(dataclasses.replace(ivy, ports=None))
+        assert rep.ok()
+        assert any(d.code == "M203" and d.severity == "info"
+                   for d in rep.diagnostics)
+
+    def test_zero_flop_rate_m205(self, ivy):
+        fpc = dict(ivy.flops_per_cycle)
+        fpc["DP"] = {**fpc["DP"], "ADD": 0}
+        rep = lint_machine(dataclasses.replace(ivy, flops_per_cycle=fpc))
+        assert "M205" in [d.code for d in rep.errors]
+
+    def test_bandwidth_inversion_m201(self, ivy):
+        # swap the first L2 curve with a farther MEM-level one: nearer
+        # slower than farther at equal core counts is an error
+        results = list(ivy.results)
+        idx = next(i for i, r in enumerate(results) if r.level == "L2")
+        results[idx] = dataclasses.replace(
+            results[idx],
+            bandwidth_bytes=tuple(b / 100
+                                  for b in results[idx].bandwidth_bytes))
+        rep = lint_machine(dataclasses.replace(ivy,
+                                               results=tuple(results)))
+        assert "M201" in [d.code for d in rep.errors]
+
+    def test_no_hierarchy_m206(self, ivy):
+        rep = lint_machine(dataclasses.replace(ivy, levels=()))
+        assert any(d.code == "M206" for d in rep.errors)
+
+
+# ----------------------------------------------------------------------
+class TestCrossRules:
+    def test_model_kind_mismatch_x301(self, ivy):
+        k = parse_kernel((STENCILS / "stencil_2d5pt.c").read_text())
+        rep = lint_request(k, ivy, models=["hlo-roofline"])
+        assert "X301" in [d.code for d in rep.errors]
+
+    def test_unknown_model_name_is_not_a_lint_finding(self, ivy):
+        """Unknown registry names stay ordinary ValueErrors (CLI exit 2);
+        lint only judges *registered* combinations."""
+        k = parse_kernel((STENCILS / "stencil_2d5pt.c").read_text())
+        rep = lint_request(k, ivy, models=["bogus"])
+        assert all(not d.code.startswith("X3") for d in rep.errors)
+
+    def test_sim_dense_x303(self, ivy):
+        k = parse_kernel((STENCILS / "stencil_2d5pt.c").read_text())
+        rep = lint_request(k, ivy, models=["ecm"], predictor="SIM",
+                           compiled=True)
+        d = next(d for d in rep.errors if d.code == "X303")
+        assert "no analytic closed form" in d.message
+
+    def test_ports_without_table_x306(self, ivy):
+        k = parse_kernel((STENCILS / "stencil_2d5pt.c").read_text())
+        rep = lint_request(k, dataclasses.replace(ivy, ports=None),
+                           models=["ecm"], incore="ports")
+        assert "X306" in [d.code for d in rep.errors]
+
+    def test_load_failure_wraps_exceptions(self):
+        rep = load_failure("nosuch.c", FileNotFoundError("gone"))
+        assert rep.codes() == ["K100"] and not rep.ok()
+        rep = load_failure("bad.yaml", ValueError("bad"), kind="machine")
+        assert rep.codes() == ["M200"]
+
+
+# ----------------------------------------------------------------------
+class TestAnalyzeWiring:
+    SRC = "configs/stencils/stencil_3d7pt.c"
+
+    def test_warn_mode_bit_for_bit_parity(self):
+        """Acceptance: lint="warn" adds the diagnostics key and changes
+        no modeled number."""
+        kw = dict(model="ecm", constants={"M": 130, "N": 100})
+        off = analyze(self.SRC, "IVY", **kw).to_dict()
+        warn = analyze(self.SRC, "IVY", lint="warn", **kw).to_dict()
+        diags = warn.pop("diagnostics")
+        assert warn == off
+        assert isinstance(diags, list)
+
+    def test_warn_mode_carries_findings(self):
+        res = analyze(self.SRC, "IVY", model="ecm", lint="warn")
+        codes = [d["code"] for d in res.to_dict()["diagnostics"]]
+        assert "K107" in codes            # M, N unbound
+        assert res.report.ok()
+        assert res.t_ecm == res.result.t_ecm   # delegation
+
+    def test_error_mode_raises_before_compute(self):
+        with pytest.raises(LintError) as ei:
+            analyze(self.SRC, "IVY", model="hlo-roofline",
+                    constants={"M": 8, "N": 8}, lint="error")
+        assert "X301" in ei.value.report.codes()
+
+    def test_error_mode_passes_clean_requests(self):
+        res = analyze(self.SRC, "IVY", model="ecm",
+                      constants={"M": 130, "N": 100}, lint="error")
+        assert res.to_dict()["diagnostics"] == []
+
+    def test_unknown_lint_mode_rejected(self):
+        with pytest.raises(ValueError, match="lint mode"):
+            analyze(self.SRC, "IVY", model="ecm", lint="loud")
+
+    def test_sweep_attaches_one_report_to_every_result(self):
+        out = sweep(self.SRC, "IVY", "N", [50, 60], models=["ecm"],
+                    constants={"M": 20}, lint="warn")
+        reps = {id(r.report) for r in out["ecm"]}
+        assert len(reps) == 1
+        plain = sweep(self.SRC, "IVY", "N", [50, 60], models=["ecm"],
+                      constants={"M": 20})
+        for r, p in zip(out["ecm"], plain["ecm"]):
+            d = r.to_dict()
+            d.pop("diagnostics")
+            assert d == p.to_dict()
+
+
+# ----------------------------------------------------------------------
+class TestServiceReplay:
+    def test_lint_report_stored_and_replayed(self, tmp_path):
+        from repro.service import AnalysisService
+        src = "configs/stencils/stencil_3d7pt.c"
+        s1 = AnalysisService(cache_dir=str(tmp_path))
+        r1 = s1.analyze(src, "IVY", "ecm", lint="warn")
+        codes1 = [d["code"] for d in r1.to_dict()["diagnostics"]]
+        assert "K107" in codes1
+        kinds = s1.store.summary(detail=True)["by_kind"]
+        assert kinds.get("lint") == 1
+        # fresh process stand-in: new service, cold in-memory caches
+        clear_report_cache()
+        s2 = AnalysisService(cache_dir=str(tmp_path))
+        r2 = s2.analyze(src, "IVY", "ecm", lint="warn")
+        assert r2.to_dict() == r1.to_dict()
+        assert s2.stats.computed == 0 and s2.stats.disk_hits == 2
+
+    def test_service_error_mode_raises(self, tmp_path):
+        from repro.service import AnalysisService
+        svc = AnalysisService(cache_dir=str(tmp_path))
+        with pytest.raises(LintError):
+            svc.analyze("configs/stencils/stencil_2d5pt.c", "IVY",
+                        "hlo-roofline", lint="error")
+
+
+# ----------------------------------------------------------------------
+class TestCLI:
+    @pytest.mark.parametrize("fname", PAPER_STENCILS)
+    def test_lint_paper_stencils_exit_0(self, fname, capsys):
+        rc, out, _ = run_cli(["lint", f"configs/stencils/{fname}",
+                              "-m", "ivybridge_ep.yaml"], capsys)
+        assert rc == 0
+        assert "0 error(s)" in out or "no findings" in out
+
+    def test_lint_non_affine_exit_3(self, tmp_path, capsys):
+        p = tmp_path / "sq.c"
+        p.write_text("double a[N];\nfor (int i = 0; i < N; i++) {\n"
+                     "  a[i] = a[i*i];\n}\n")
+        rc, out, _ = run_cli(["lint", str(p), "-m", "IVY"], capsys)
+        assert rc == 3
+        assert "[K101]" in out
+
+    def test_lint_json_and_sarif(self, capsys):
+        argv = ["lint", "configs/stencils/stencil_3d7pt.c", "-m", "IVY"]
+        rc, out, _ = run_cli(argv + ["--json"], capsys)
+        assert rc == 0
+        d = json.loads(out)
+        assert set(d) == {"target", "errors", "warnings", "diagnostics"}
+        assert LintReport.from_dict(d).to_dict() == d
+        rc, out, _ = run_cli(argv + ["--sarif"], capsys)
+        assert rc == 0
+        s = json.loads(out)
+        assert s["version"] == "2.1.0"
+        assert s["runs"][0]["tool"]["driver"]["name"] == "repro-lint"
+
+    def test_lint_unreadable_source_is_diagnostic(self, capsys):
+        rc, out, _ = run_cli(["lint", "nosuch.c", "-m", "IVY"], capsys)
+        assert rc == 3 and "[K100]" in out
+
+    def test_machine_validate_all_bundled_clean(self, capsys):
+        rc, out, _ = run_cli(["machine", "validate"], capsys)
+        assert rc == 0
+        for f in ("ivybridge_ep.yaml", "tpu_v5e.yaml"):
+            assert f in out
+
+    def test_machine_validate_broken_yaml_exit_3(self, tmp_path, capsys):
+        p = tmp_path / "broken.yaml"
+        p.write_text("model name: [unterminated\n")
+        rc, out, _ = run_cli(["machine", "validate", str(p)], capsys)
+        assert rc == 3 and "[M200]" in out
+        rc, out, _ = run_cli(["machine", "validate", str(p), "--json"],
+                             capsys)
+        assert rc == 3
+        d = json.loads(out)
+        assert d[0]["file"] == str(p) and d[0]["errors"] == 1
+
+    def test_machine_validate_inconsistent_geometry(self, tmp_path,
+                                                    capsys):
+        src = (MACHINES / "ivybridge_ep.yaml").read_text()
+        p = tmp_path / "geom.yaml"
+        p.write_text(src.replace(
+            "{sets: 64, ways: 8, cl_size: 64}",
+            "{sets: 64, ways: 8, cl_size: 64, size: 48 kB}"))
+        rc, out, _ = run_cli(["machine", "validate", str(p)], capsys)
+        assert rc == 3 and "[M202]" in out
+
+    def test_analyze_preflight_rejects_kind_mismatch(self, capsys):
+        rc, _, err = run_cli(
+            ["analyze", "configs/stencils/stencil_2d5pt.c", "-m", "IVY",
+             "-p", "hlo-roofline", "-D", "M", "8", "-D", "N", "8"],
+            capsys)
+        assert rc == 3 and "X301" in err
+
+
+# ----------------------------------------------------------------------
+class TestLCSafetySoundness:
+    """ISSUE 7 satellite: the lint LC verdict is sound on generated star
+    kernels — LC-safe implies LC/SIM volume agreement (within one cache
+    line), and the pinned LC-unsafe pathology measurably diverges."""
+
+    @given(st.integers(1, 2), st.integers(48, 220), st.booleans())
+    @settings(max_examples=8, deadline=None)
+    def test_lc_safe_verdict_implies_volume_agreement(self, radius, n,
+                                                      three_d):
+        ivy = load_machine("IVY")
+        n |= 1                      # odd N: clear of set pathologies
+        k = _star3d(radius, n) if three_d else _star2d(radius, n)
+        report = lint_kernel(k, ivy)
+        if not lc_safe(report):
+            return                  # unsafe half pinned below
+        # sizes near an LC transition legitimately disagree (paper Fig. 4)
+        for lv in ivy.levels:
+            for tr in layer_conditions.transition_points(
+                    k, lv.size_bytes, "N"):
+                if abs(n - tr.max_value) < 8:
+                    return
+        cl = ivy.cacheline_bytes
+        lc = predict_volumes(k, ivy, predictor="LC")
+        sim = predict_volumes(k, ivy, predictor="SIM",
+                              sim_kwargs={"warmup_rows": 6,
+                                          "measure_rows": 2})
+        for lvl in ("L1", "L2"):
+            assert sim.volume(lvl) == pytest.approx(lc.volume(lvl),
+                                                    abs=cl)
+
+    def test_lc_unsafe_verdict_diverges(self):
+        """A radius-4 star with a power-of-two leading dimension maps 10
+        lines into one 8-way L1 set: lint flags K106 and the simulator
+        measures conflict traffic LC cannot see (> 1 line/it)."""
+        ivy = load_machine("IVY")
+        k = _star2d(4, 1024)
+        report = lint_kernel(k, ivy)
+        assert not lc_safe(report)
+        assert "K106" in report.codes()
+        lc = predict_volumes(k, ivy, predictor="LC")
+        sim = predict_volumes(k, ivy, predictor="SIM",
+                              sim_kwargs={"warmup_rows": 6,
+                                          "measure_rows": 2})
+        assert abs(sim.volume("L1") - lc.volume("L1")) \
+            > ivy.cacheline_bytes
+
+    def test_odd_leading_dimension_is_lc_safe(self):
+        ivy = load_machine("IVY")
+        assert lc_safe(lint_kernel(_star2d(2, 201), ivy))
+        assert LC_UNSAFE_CODES == {"K101", "K102", "K106"}
