@@ -1,0 +1,179 @@
+#!/usr/bin/env python
+"""Fleet gate: diff fleet artifacts against checked-in goldens.
+
+CI (and scripts/verify.sh) runs ``python -m repro fleet --all`` to emit
+one JSON report per (config, machine) under ``benchmarks/out/fleet/``,
+then this script compares each against its golden in
+``benchmarks/golden/fleet/`` and fails on predicted-performance
+regressions — the whole-model analogue of a failing test:
+
+* predicted times and volume totals (graph roll-up, module roofline
+  terms, per-bound-class times, flop/byte totals) may drift by at most
+  ``--tol`` (relative, default 5%);
+* structural fields are exact: op/collective counts, the module and
+  graph bound classes, the conservation flag;
+* every golden must have an artifact and vice versa (a config or
+  machine added/removed without a golden update fails the gate).
+
+Intended drift (a model change, regenerated HLO dumps, new configs) is
+accepted by re-baselining:
+
+    PYTHONPATH=src python -m repro fleet --all
+    python scripts/fleet_gate.py --update-goldens
+    git add benchmarks/golden/fleet && git commit ...
+
+See docs/fleet.md for the tolerance policy and report anatomy.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+ARTIFACTS = ROOT / "benchmarks" / "out" / "fleet"
+GOLDENS = ROOT / "benchmarks" / "golden" / "fleet"
+
+# relative-tolerance scalars: predicted seconds and accounted volumes
+TOLERANT_FIELDS = (
+    ("t_graph",),
+    ("t_graph_serial",),
+    ("totals", "mxu_flops"),
+    ("totals", "vpu_flops"),
+    ("totals", "hbm_bytes"),
+    ("totals", "wire_bytes"),
+    ("module", "t_compute"),
+    ("module", "t_memory"),
+    ("module", "t_collective"),
+    ("module", "t_total_overlapped"),
+    ("module", "t_total_serial"),
+) + tuple(("bounds", k, "time") for k in ("MXU", "VPU", "HBM", "ICI"))
+
+# exact structural fields: counts, bound classes, conservation
+EXACT_FIELDS = (
+    ("totals", "n_ops"),
+    ("totals", "n_collectives"),
+    ("bottleneck",),
+    ("module", "bottleneck"),
+    ("conserved",),
+)
+
+
+def _get(d: dict, path: tuple):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def _rel_drift(new: float, old: float) -> float:
+    if old == new:
+        return 0.0
+    denom = max(abs(old), abs(new), 1e-30)
+    return abs(new - old) / denom
+
+
+def compare(artifact: dict, golden: dict, tol: float) -> list[str]:
+    """Human-readable failure lines for one (artifact, golden) pair."""
+    fails = []
+    for path in TOLERANT_FIELDS:
+        dotted = ".".join(path)
+        new, old = _get(artifact, path), _get(golden, path)
+        if new is None or old is None:
+            fails.append(f"{dotted}: missing "
+                         f"(artifact={new!r}, golden={old!r})")
+            continue
+        drift = _rel_drift(float(new), float(old))
+        if drift > tol:
+            fails.append(f"{dotted}: {old!r} -> {new!r} "
+                         f"({100.0 * drift:.1f}% drift > "
+                         f"{100.0 * tol:.0f}% tolerance)")
+    for path in EXACT_FIELDS:
+        dotted = ".".join(path)
+        new, old = _get(artifact, path), _get(golden, path)
+        if new != old:
+            fails.append(f"{dotted}: {old!r} -> {new!r} (must match exactly)")
+    return fails
+
+
+def run_gate(artifact_dir: pathlib.Path, golden_dir: pathlib.Path,
+             tol: float, update: bool) -> int:
+    artifacts = {p.name: p for p in sorted(artifact_dir.glob("*.json"))}
+    if not artifacts:
+        print(f"fleet gate: no artifacts under {artifact_dir} — run "
+              "`python -m repro fleet --all` first", file=sys.stderr)
+        return 2
+
+    if update:
+        golden_dir.mkdir(parents=True, exist_ok=True)
+        for stale in golden_dir.glob("*.json"):
+            if stale.name not in artifacts:
+                stale.unlink()
+                print(f"  removed stale golden {stale.name}")
+        for name, path in artifacts.items():
+            shutil.copyfile(path, golden_dir / name)
+        print(f"fleet gate: re-baselined {len(artifacts)} goldens "
+              f"under {golden_dir}")
+        return 0
+
+    goldens = {p.name: p for p in sorted(golden_dir.glob("*.json"))}
+    if not goldens:
+        print(f"fleet gate: no goldens under {golden_dir} — baseline with "
+              "`python scripts/fleet_gate.py --update-goldens`",
+              file=sys.stderr)
+        return 2
+
+    failures = 0
+    for name in sorted(set(artifacts) | set(goldens)):
+        if name not in goldens:
+            failures += 1
+            print(f"FAIL {name}: artifact has no golden "
+                  "(--update-goldens to accept)")
+            continue
+        if name not in artifacts:
+            failures += 1
+            print(f"FAIL {name}: golden has no artifact (config/machine "
+                  "removed? --update-goldens to accept)")
+            continue
+        artifact = json.loads(artifacts[name].read_text())
+        golden = json.loads(goldens[name].read_text())
+        fails = compare(artifact, golden, tol)
+        if fails:
+            failures += 1
+            print(f"FAIL {name}:")
+            for line in fails:
+                print(f"  {line}")
+        else:
+            print(f"  ok {name}")
+    if failures:
+        print(f"fleet gate: {failures} of {len(set(artifacts) | set(goldens))}"
+              " reports regressed (docs/fleet.md#updating-goldens)")
+        return 1
+    print(f"fleet gate: OK ({len(artifacts)} reports within "
+          f"{100.0 * tol:.0f}% of goldens)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare fleet artifacts against golden reports")
+    ap.add_argument("--artifacts", default=str(ARTIFACTS), metavar="DIR",
+                    help="fleet JSON artifacts (default benchmarks/out/fleet)")
+    ap.add_argument("--goldens", default=str(GOLDENS), metavar="DIR",
+                    help="golden reports (default benchmarks/golden/fleet)")
+    ap.add_argument("--tol", type=float, default=0.05, metavar="FRAC",
+                    help="relative tolerance on predicted times/volumes "
+                         "(default 0.05 = 5%%)")
+    ap.add_argument("--update-goldens", action="store_true",
+                    help="copy current artifacts over the goldens "
+                         "(accept intended drift) instead of comparing")
+    args = ap.parse_args(argv)
+    return run_gate(pathlib.Path(args.artifacts), pathlib.Path(args.goldens),
+                    args.tol, args.update_goldens)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

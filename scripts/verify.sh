@@ -34,6 +34,16 @@ python -m repro machine validate \
   || { echo "lint gate: machine validate failed"; exit 1; }
 
 echo
+echo "== fleet gate: whole-model bottleneck reports vs goldens =="
+# every config with a checked-in HLO dump is analyzed on both bundled
+# machines; >5% predicted-time drift vs benchmarks/golden/fleet fails
+# (accept intended drift with: python scripts/fleet_gate.py --update-goldens)
+python -m repro fleet --all --out benchmarks/out/fleet > /dev/null \
+  || { echo "fleet gate: report generation failed"; exit 1; }
+python scripts/fleet_gate.py \
+  || { echo "fleet gate: predicted-performance regression"; exit 1; }
+
+echo
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 

@@ -204,6 +204,38 @@ def build_parser() -> argparse.ArgumentParser:
     vp.add_argument("--json", action="store_true",
                     help="emit one lint report per file as JSON")
 
+    sp = sub.add_parser("fleet",
+                        help="whole-model bottleneck reports over compiled "
+                             "HLO modules: ranked top ops, bound-class mix "
+                             "(MXU/VPU/HBM/ICI), per-layer attribution")
+    sp.add_argument("--config", action="append", default=None,
+                    metavar="NAME",
+                    help="bundled config name (src/repro/configs/hlo/"
+                         "<NAME>.hlo.gz) or an HLO dump path; repeatable")
+    sp.add_argument("--all", action="store_true",
+                    help="analyze every config with a checked-in HLO dump "
+                         "(default when no --config is given; overrides "
+                         "--config)")
+    sp.add_argument("-m", "--machine", action="append", default=None,
+                    metavar="MACHINE",
+                    help="machine description (repeatable; default: both "
+                         "bundled machines, IVY and V5E)")
+    sp.add_argument("--top", type=int, default=20, metavar="N",
+                    help="ops ranked in the report (default 20)")
+    sp.add_argument("--dtype", default="BF16",
+                    help="peak-flops dtype for TPU machines (default BF16)")
+    sp.add_argument("--out", default="benchmarks/out/fleet", metavar="DIR",
+                    help="write one JSON artifact per (config, machine) "
+                         "as DIR/<config>__<machine>.json — the files "
+                         "scripts/fleet_gate.py compares against the "
+                         "goldens ('-' disables)")
+    sp.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="serve reports through the disk-backed result "
+                         "cache rooted at DIR (kind 'fleet'; warm runs "
+                         "skip the module walk entirely)")
+    sp.add_argument("--json", action="store_true",
+                    help="emit the full report payloads as JSON")
+
     sp = sub.add_parser("cache",
                         help="inspect or clear a disk-backed result cache")
     sp.add_argument("action", choices=["stats", "clear"],
@@ -301,7 +333,18 @@ def cmd_analyze(args) -> int:
                                incore=args.incore)
         results.append((model, res))
     if args.json:
-        payload = [r.to_dict() for _, r in results]
+        payload = []
+        for _, r in results:
+            d = r.to_dict()
+            if args.cores > 1 and hasattr(r, "scaling_curve"):
+                # the ECM multi-core saturation prediction, keyed only
+                # under an explicit --cores so single-core payloads keep
+                # their exact from_dict round-trip
+                d["cores"] = args.cores
+                d["performance_at_cores"] = r.performance_flops(args.cores)
+                d["scaling_curve"] = r.scaling_curve(
+                    max(args.cores, r.saturation_cores))
+            payload.append(d)
         if args.stats:
             payload = {"results": payload,
                        "stats": _stats_payload(service, sess)}
@@ -452,6 +495,33 @@ def cmd_cache(args) -> int:
     return 0
 
 
+def cmd_fleet(args) -> int:
+    """Whole-model bottleneck reports (repro.fleet, DESIGN.md §10): one
+    ranked report per (config, machine), emitted as text/JSON and as the
+    per-pair artifact files the CI fleet gate diffs against goldens."""
+    from repro import fleet
+    configs_ = args.config if args.config and not args.all else None
+    machines = args.machine or list(fleet.DEFAULT_MACHINES)
+    analyzer = fleet.FleetAnalyzer(cache_dir=args.cache_dir, top=args.top,
+                                   dtype=args.dtype)
+    results = analyzer.analyze_all(configs_, machines)
+    paths = []
+    if args.out and args.out != "-":
+        paths = analyzer.write_artifacts(results, machines, args.out)
+    if args.json:
+        print(json.dumps([r.to_dict() for r in results], indent=2,
+                         sort_keys=True))
+        return 0
+    for i, rep in enumerate(results):
+        if i:
+            print()
+        print(rep.render(top=min(args.top, 5)))
+    if paths:
+        print(f"\nwrote {len(paths)} artifact(s) under {args.out} "
+              "(compare: python scripts/fleet_gate.py)")
+    return 0
+
+
 def _cmd_blocking_grid(args, machine, kernel) -> int:
     start, stop, step = args.grid
     specs = [(args.symbol, range(start, stop + 1, step))]
@@ -515,7 +585,7 @@ def main(argv=None) -> int:
     try:
         return {"analyze": cmd_analyze, "sweep": cmd_sweep,
                 "blocking": cmd_blocking, "lint": cmd_lint,
-                "machine": cmd_machine,
+                "machine": cmd_machine, "fleet": cmd_fleet,
                 "cache": cmd_cache}[args.command](args)
     except LintError as e:
         print(f"error: {e}", file=sys.stderr)

@@ -11,10 +11,13 @@ are whole dataflow graphs, and their analysis (:mod:`repro.core
 from __future__ import annotations
 
 import dataclasses
+import gzip
 import hashlib
 import pathlib
 
 from . import KernelFrontend, register_frontend, resolve_path
+
+_HLO_SUFFIXES = (".hlo", ".txt", ".hlo.gz")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,11 +49,11 @@ class HLOFrontend(KernelFrontend):
         if hasattr(source, "as_text") and callable(source.as_text):
             return True
         if isinstance(source, pathlib.Path):
-            return source.suffix in (".hlo", ".txt")
+            return source.name.endswith(_HLO_SUFFIXES)
         if isinstance(source, str):
             if "\n" in source:
                 return _looks_like_hlo(source)
-            return source.endswith((".hlo", ".txt"))
+            return source.endswith(_HLO_SUFFIXES)
         return False
 
     def load(self, source, name: str | None = None,
@@ -68,13 +71,17 @@ class HLOFrontend(KernelFrontend):
         if hasattr(source, "as_text") and callable(source.as_text):
             text = source.as_text()
         elif isinstance(source, (str, pathlib.Path)) and (
-                str(source).endswith((".hlo", ".txt"))
+                str(source).endswith(_HLO_SUFFIXES)
                 and "\n" not in str(source)):
             path = resolve_path(source)
             if path is None:
                 raise FileNotFoundError(f"HLO dump not found: {source!r}")
-            text = path.read_text()
-            default_name = path.stem
+            if path.name.endswith(".hlo.gz"):
+                text = gzip.decompress(path.read_bytes()).decode()
+                default_name = path.name[:-len(".hlo.gz")]
+            else:
+                text = path.read_text()
+                default_name = path.stem
         elif isinstance(source, str):
             text = source
         else:

@@ -193,6 +193,36 @@ class CollectiveRecord:
 
 
 @dataclasses.dataclass
+class OpCost:
+    """Per-instruction cost record (``analyze_hlo_text(per_op=True)``).
+
+    Records are accumulated at the *same* points as the module totals, so
+    summing any field over ``HLOAnalysis.ops`` reproduces the corresponding
+    module total exactly (conservation by construction).  Fusion-internal
+    ops fold their flops into the owning ``fusion`` record, mirroring the
+    fusion-boundary byte accounting; while/conditional/call bodies get
+    their own records with the inherited trip-count multiplier."""
+    name: str
+    opcode: str
+    computation: str
+    shape: str
+    multiplier: int
+    mxu_flops: float = 0.0
+    vpu_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    group_size: int = 0
+    collective: str = ""              # wire-model kind, "" if not a collective
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "OpCost":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+@dataclasses.dataclass
 class HLOAnalysis:
     mxu_flops: float = 0.0            # dot/conv flops, per chip
     vpu_flops: float = 0.0            # elementwise/reduce flops, per chip
@@ -206,6 +236,8 @@ class HLOAnalysis:
         default_factory=lambda: defaultdict(float))
     flops_by_shape: dict = dataclasses.field(
         default_factory=lambda: defaultdict(float))
+    # per-instruction records (only filled by analyze_hlo_text(per_op=True))
+    ops: list[OpCost] = dataclasses.field(default_factory=list)
 
     @property
     def total_flops(self) -> float:
@@ -308,19 +340,26 @@ def _slice_consumption(inst: Instr, comp: Computation,
 
 
 def analyze_hlo_text(hlo_text: str, default_group: int = 1,
-                     assume_rs_rewrite: bool = True) -> HLOAnalysis:
+                     assume_rs_rewrite: bool = True,
+                     per_op: bool = False) -> HLOAnalysis:
     """``assume_rs_rewrite``: an all-reduce whose only consumers are
     (dynamic-)slices is the AR+DS pattern that XLA's TPU/GPU pipelines
     rewrite to a reduce-scatter (ReduceScatterCreator); the CPU pipeline
     used for this dry-run lacks the pass, so we re-cost such ARs as RS of
     the sliced result — (n-1)/n x slice instead of 2(n-1)/n x full.
-    Disable to see the raw CPU-pipeline cost (§Perf reports both)."""
+    Disable to see the raw CPU-pipeline cost (§Perf reports both).
+
+    ``per_op``: additionally record an :class:`OpCost` per contributing
+    instruction in ``HLOAnalysis.ops``.  Every contribution is added to
+    exactly one record via the same expression that feeds the module
+    total, so the per-op sums conserve against the totals by construction
+    (the fleet analyzer's invariant, pinned in tests)."""
     comps, entry = parse_computations(hlo_text)
     out = HLOAnalysis()
     # NB: no memoization — a computation invoked from two call sites executes
     # twice. HLO computations form a DAG, so recursion terminates.
 
-    def visit(name: str, mult: int, traffic: bool):
+    def visit(name: str, mult: int, traffic: bool, owner: OpCost | None = None):
         if name not in comps:
             return
         comp = comps[name]
@@ -328,22 +367,40 @@ def analyze_hlo_text(hlo_text: str, default_group: int = 1,
             op = inst.opcode
             dims, _ = _shape_dims(inst.type_str)
             elems = math.prod(dims) if dims else 1
+            # the record this instruction's contributions accrue to: inside
+            # a fusion (traffic=False paths) that is the owning fusion's
+            # record; otherwise a fresh record for this instruction
+            rec = None
+            if per_op:
+                rec = owner if owner is not None else OpCost(
+                    name=inst.name, opcode=op, computation=comp.name,
+                    shape=inst.type_str.split("{")[0].strip(),
+                    multiplier=mult)
             # ---- flops --------------------------------------------------
             if op == "dot":
                 f = mult * _dot_flops(inst, comp.shapes)
                 out.mxu_flops += f
                 out.flops_by_shape[(op, inst.type_str.split("{")[0])] += f
+                if rec is not None:
+                    rec.mxu_flops += f
             elif op == "convolution":
-                out.mxu_flops += mult * 2.0 * elems  # lower bound w/o kernel
-            elif op in _ELEMENTWISE:
-                out.vpu_flops += mult * elems
-            elif op in _TRANSCENDENTAL:
-                out.vpu_flops += mult * elems
+                f = mult * 2.0 * elems  # lower bound w/o kernel
+                out.mxu_flops += f
+                if rec is not None:
+                    rec.mxu_flops += f
+            elif op in _ELEMENTWISE or op in _TRANSCENDENTAL:
+                f = mult * elems
+                out.vpu_flops += f
+                if rec is not None:
+                    rec.vpu_flops += f
             elif op in ("reduce", "reduce-window"):
                 ops_ = _operands(inst)
                 in_elems = (math.prod(_shape_dims(
                     comp.shapes.get(ops_[0], ""))[0] or [1]) if ops_ else elems)
-                out.vpu_flops += mult * in_elems
+                f = mult * in_elems
+                out.vpu_flops += f
+                if rec is not None:
+                    rec.vpu_flops += f
             # ---- collectives --------------------------------------------
             base = op[:-len("-start")] if op.endswith("-start") else op
             if base in _COLLECTIVES:
@@ -362,6 +419,10 @@ def analyze_hlo_text(hlo_text: str, default_group: int = 1,
                 out.collective_by_kind[base] += mult * wire
                 out.schedule.append(CollectiveRecord(
                     base, rbytes, wire, n, mult, inst.name))
+                if rec is not None:
+                    rec.wire_bytes += mult * wire
+                    rec.group_size = n
+                    rec.collective = base
             # ---- HBM traffic (fusion boundary) ---------------------------
             if traffic and op not in _NO_TRAFFIC:
                 if op in ("dynamic-slice", "gather"):
@@ -384,7 +445,11 @@ def analyze_hlo_text(hlo_text: str, default_group: int = 1,
                     tb = mult * (opb + inst.result_bytes)
                 out.hbm_bytes += tb
                 out.traffic_by_shape[(op, inst.type_str.split("{")[0])] += tb
+                if rec is not None:
+                    rec.hbm_bytes += tb
             # ---- recursion ------------------------------------------------
+            # called computations on traffic-carrying paths record their own
+            # ops; fusion internals (flops-only paths) accrue to `rec`
             if op == "while":
                 trip = 1
                 tm = _TRIP_RE.search(inst.rest)
@@ -393,25 +458,31 @@ def analyze_hlo_text(hlo_text: str, default_group: int = 1,
                 cm = re.search(r"condition=%([\w.\-]+)", inst.rest)
                 bm = re.search(r"body=%([\w.\-]+)", inst.rest)
                 if cm:
-                    visit(cm.group(1), mult * trip, traffic)
+                    visit(cm.group(1), mult * trip, traffic,
+                          None if traffic else rec)
                 if bm:
-                    visit(bm.group(1), mult * trip, traffic)
+                    visit(bm.group(1), mult * trip, traffic,
+                          None if traffic else rec)
             elif op == "fusion":
                 cm = re.search(r"calls=%([\w.\-]+)", inst.rest)
                 if cm:
-                    visit(cm.group(1), mult, False)   # flops only
+                    visit(cm.group(1), mult, False, rec)   # flops only
             elif op == "conditional":
                 for branch in re.findall(r"%([\w.\-]+)",
                                          inst.rest.split("branch_computations=")[-1]
                                          .split("}")[0]) \
                         if "branch_computations=" in inst.rest else []:
-                    visit(branch, mult, traffic)
+                    visit(branch, mult, traffic, None if traffic else rec)
             elif op in ("call", "async-start"):
                 cm = re.search(r"(?:to_apply|calls)=%([\w.\-]+)", inst.rest)
                 if cm:
-                    visit(cm.group(1), mult, traffic)
+                    visit(cm.group(1), mult, traffic, None if traffic else rec)
             # NB: reduce/sort to_apply regions are per-element lambdas —
             # intentionally not recursed.
+            if rec is not None and rec is not owner and (
+                    rec.mxu_flops or rec.vpu_flops or rec.hbm_bytes
+                    or rec.wire_bytes):
+                out.ops.append(rec)
 
     visit(entry, 1, True)
     return out

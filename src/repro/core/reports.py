@@ -34,11 +34,23 @@ def _incore_lines(incore: dict) -> list[str]:
     return lines
 
 
-def ecm_report(res: ECMResult) -> str:
+def ecm_report(res: ECMResult, cores: int = 1) -> str:
     lines = ["-" * 26 + " ECM " + "-" * 26,
              res.notation(),
              res.notation_cumulative(),
              f"saturating at {res.saturation_cores} cores"]
+    if cores > 1 and res.flops_per_unit:
+        # the multi-core saturation prediction (paper §1.2.3): linear in
+        # cores until the memory term is fully occupied
+        sat = res.saturation_cores
+        state = "saturated" if cores >= sat else "scaling"
+        lines.append(f"performance at {cores} cores: "
+                     f"{res.performance_flops(cores) / 1e9:.2f} GFLOP/s "
+                     f"({state})")
+        curve = res.scaling_curve(max(cores, sat))
+        lines.append("scaling (GFLOP/s at 1.."
+                     f"{len(curve)} cores): "
+                     + " ".join(f"{p / 1e9:.2f}" for p in curve))
     lines += _incore_lines(res.incore)
     return "\n".join(lines)
 
@@ -127,7 +139,7 @@ def from_json(s: str) -> AnyResult:
 def text_report(res: AnyResult, cores: int = 1) -> str:
     """Dispatch to the right text renderer for any model result."""
     if isinstance(res, ECMResult):
-        return ecm_report(res)
+        return ecm_report(res, cores=cores)
     if isinstance(res, HLORooflineResult):
         return hlo_report(res)
     if isinstance(res, RooflineResult):

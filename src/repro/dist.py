@@ -13,10 +13,19 @@ from __future__ import annotations
 import functools
 from typing import NamedTuple
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+# jax is optional at import time: the analytic collective wire models at
+# the bottom of this module (used by repro.fleet for collective pricing)
+# must stay importable in jax-free environments; the executable primitives
+# above them raise on use instead.
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    HAVE_JAX = True
+except ImportError:                   # pragma: no cover
+    jax = jnp = P = shard_map = None  # type: ignore[assignment]
+    HAVE_JAX = False
 
 
 class CompressionState(NamedTuple):
@@ -100,3 +109,40 @@ def gpipe(stage, mesh, axis: str = "pod", n_microbatches: int = 4):
         return outs.reshape(x.shape[0], *x.shape[1:])
 
     return piped
+
+
+# ----------------------------------------------------------------------
+# Analytic collective wire models (jax-free; used by repro.fleet)
+# ----------------------------------------------------------------------
+def collective_bandwidth(machine) -> float:
+    """Bytes/s at which collective wire traffic drains on ``machine``.
+
+    TPU machines price the ring on one ICI link per hop
+    (``ici link bandwidth``), matching the module-level
+    ``HLORooflineResult.t_collective`` term so per-op collective times
+    conserve against the whole-module roofline.  Cache machines (x86)
+    have no interconnect field: intra-node collectives move through
+    shared memory, so the main memory bandwidth is the wire rate.
+    """
+    bw = float(getattr(machine, "ici_link_bandwidth", 0.0) or 0.0)
+    if bw:
+        return bw
+    return float(getattr(machine, "main_memory_bandwidth", 0.0) or 0.0)
+
+
+def collective_wire_time(wire_bytes: float, machine) -> float:
+    """Seconds on the wire for already-ring-expanded ``wire_bytes``."""
+    bw = collective_bandwidth(machine)
+    return wire_bytes / bw if bw else 0.0
+
+
+def collective_time(kind: str, payload_bytes: float, group: int,
+                    machine) -> float:
+    """Ring-model seconds for one collective: expand ``payload_bytes``
+    through the per-kind wire factor (all-reduce 2(n-1)/n, all-gather
+    (n-1)/n, reduce-scatter (n-1)x, all-to-all (n-1)/n, permute 1x —
+    the factors of ``hlo_analysis._collective_wire_bytes``) and divide
+    by :func:`collective_bandwidth`."""
+    from repro.core.hlo_analysis import _collective_wire_bytes
+    return collective_wire_time(
+        _collective_wire_bytes(kind, payload_bytes, group), machine)

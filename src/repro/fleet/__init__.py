@@ -1,0 +1,31 @@
+"""Fleet-scale graph analysis (DESIGN.md §11): whole-model bottleneck
+reports, gated in CI like tests.
+
+Where the rest of the repo analyzes one loop nest or prices one op, this
+package walks an *entire compiled HLO module* — every dot, fusion,
+collective, and while-looped layer stack — prices each instruction
+against a machine description (Stengel-style ECM-per-op, arXiv:1410.5010),
+and rolls the records up into a ranked bottleneck report whose totals
+provably conserve against ``analyze_hlo_text``'s module totals:
+
+    from repro.fleet import FleetAnalyzer
+
+    rep = FleetAnalyzer().analyze("deepseek-v3-671b", "V5E")
+    print(rep.render())
+    rep.to_dict()        # the CI artifact / golden payload
+
+CLI: ``python -m repro fleet [--config NAME | --all] [-m MACHINE]``;
+``scripts/fleet_gate.py`` compares the emitted artifacts against the
+checked-in goldens (``benchmarks/golden/fleet/``) with tolerances so CI
+fails on predicted-performance regressions.  See docs/fleet.md.
+"""
+from .analyzer import (DEFAULT_MACHINES, DUMP_DIR, FleetAnalyzer,
+                       dump_configs, load_program, machine_label)
+from .pricing import BOUND_CLASSES, MachineRates, PricedOp, price_op, price_ops
+from .report import FleetReport
+
+__all__ = [
+    "BOUND_CLASSES", "DEFAULT_MACHINES", "DUMP_DIR", "FleetAnalyzer",
+    "FleetReport", "MachineRates", "PricedOp", "dump_configs",
+    "load_program", "machine_label", "price_op", "price_ops",
+]

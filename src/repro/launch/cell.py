@@ -138,11 +138,16 @@ class Cell:
     model_flops_global: float        # MODEL_FLOPS for the whole step
 
 
-def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+def build_cell(arch: str, shape_name: "str | configs.ShapeSpec", *,
+               multi_pod: bool = False,
                tcfg: TrainConfig | None = None,
                cfg: configs.ArchConfig | None = None) -> Cell:
+    # accept an ad-hoc ShapeSpec directly (the fleet HLO generator builds
+    # reduced shapes that are not registered in configs.SHAPES)
+    shape = (shape_name if isinstance(shape_name, configs.ShapeSpec)
+             else configs.SHAPES[shape_name])
+    shape_name = shape.name
     cfg = cfg or configs.get_config(arch)
-    shape = configs.SHAPES[shape_name]
     if not cfg.supports(shape):
         raise ValueError(f"{arch} skips {shape_name} "
                          "(full attention is quadratic; DESIGN.md §4)")

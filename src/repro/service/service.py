@@ -220,6 +220,26 @@ class AnalysisService:
         self._flight.finish(key, fut, result=value)
         return value
 
+    def serve_custom(self, key: tuple, compute, decode, *,
+                     meta: dict | None = None):
+        """Serve an extension result kind through the same three tiers as
+        ``analyze`` (memory -> single-flight -> disk -> compute).
+
+        ``key`` must be a hashable, JSON-stable tuple whose first element
+        names the kind (e.g. ``("fleet", ...)``); ``compute()`` returns
+        ``(value, payload)`` where ``payload`` is the JSON-serializable
+        form; ``decode(payload)`` rebuilds the value from a stored payload
+        (return None to treat the entry as foreign/corrupt and recompute).
+        Used by the fleet analyzer (DESIGN.md §10) so whole-module reports
+        share the warm disk cache across configs and processes."""
+        self._count(requests=1)
+
+        def _compute():
+            value, payload = compute()
+            return value, payload, dict(meta or {})
+
+        return self._serve(key, _compute, decode, None)
+
     def lint_report(self, kernel, mach: Machine, **request):
         """The store-backed lint pass behind ``analyze(..., lint=...)``:
         reports are cached like results (kind ``"lint"``), so a warm hit

@@ -54,6 +54,11 @@ def _run_chunk(machine: Machine, kernel: LoopKernel, param: str,
     """Worker entry: one shard through a fresh session, results wire-
     encoded (unique payloads + index) to keep IPC proportional to the
     number of LC regimes, not grid points."""
+    fault = os.environ.get("REPRO_WORKER_FAULT")
+    if fault == "exit":        # test hook: hard-kill mid-shard (no cleanup)
+        os._exit(3)
+    elif fault == "raise":     # test hook: ordinary in-worker exception
+        raise RuntimeError("injected worker fault (REPRO_WORKER_FAULT)")
     sess = AnalysisSession(machine)
     out = sess.sweep(kernel, param, values, models=models,
                      predictor=predictor, cores=cores,

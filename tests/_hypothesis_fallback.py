@@ -4,7 +4,8 @@ The container may not ship ``hypothesis``; rather than skip every property
 test, this shim replays each ``@given`` test over a fixed number of
 pseudo-randomly drawn examples (seeded, so runs are reproducible).  It
 implements only what the tests import: ``given``, ``settings``, and the
-``integers`` / ``sampled_from`` / ``booleans`` / ``composite`` strategies.
+``integers`` / ``sampled_from`` / ``booleans`` / ``lists`` / ``just`` /
+``composite`` strategies.
 
 Import pattern (both test modules):
 
@@ -43,6 +44,18 @@ class strategies:
     @staticmethod
     def booleans() -> Strategy:
         return Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int | None = None) -> Strategy:
+        hi = max_size if max_size is not None else min_size + 5
+        return Strategy(lambda rng: [elements.sample(rng)
+                                     for _ in range(rng.randint(min_size,
+                                                                hi))])
+
+    @staticmethod
+    def just(value) -> Strategy:
+        return Strategy(lambda rng: value)
 
     @staticmethod
     def composite(fn):

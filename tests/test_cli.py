@@ -29,6 +29,42 @@ def test_analyze_reproduces_listing4(capsys):
     assert "saturating at 4 cores" in out
 
 
+def test_analyze_cores_surfaces_ecm_saturation(capsys):
+    """--cores N must surface the multi-core ECM scaling in text: the
+    predicted performance at N cores plus the full scaling curve (the
+    long-range stencil saturates at 4 cores, so 6 cores is flat)."""
+    rc, out, _ = run_cli(LONGRANGE + ["--cores", "6"], capsys)
+    assert rc == 0
+    assert "saturating at 4 cores" in out           # unchanged baseline
+    assert "performance at 6 cores:" in out
+    assert "(saturated)" in out
+    assert "scaling (GFLOP/s at 1..6 cores):" in out
+    # below saturation the marker flips and the curve still spans the
+    # saturation point
+    rc, out, _ = run_cli(LONGRANGE + ["--cores", "2"], capsys)
+    assert rc == 0
+    assert "performance at 2 cores:" in out and "(scaling)" in out
+    assert "scaling (GFLOP/s at 1..4 cores):" in out
+
+
+def test_analyze_cores_json_scaling_curve(capsys):
+    rc, out, _ = run_cli(LONGRANGE + ["--cores", "6", "--json"], capsys)
+    assert rc == 0
+    d = json.loads(out)[0]
+    assert d["cores"] == 6
+    assert d["saturation_cores"] == 4
+    curve = d["scaling_curve"]
+    assert len(curve) == 6                           # max(cores, sat)
+    # monotone up to saturation, flat beyond
+    assert curve[0] < curve[1] < curve[3]
+    assert curve[3] == curve[4] == curve[5] == d["performance_at_cores"]
+    # single-core requests keep the historical JSON shape (round-trip
+    # pins elsewhere rely on it)
+    rc, out, _ = run_cli(LONGRANGE + ["--json"], capsys)
+    base = json.loads(out)[0]
+    assert "scaling_curve" not in base and "cores" not in base
+
+
 def test_analyze_multiple_models(capsys):
     rc, out, _ = run_cli(LONGRANGE + ["-p", "roofline-iaca"], capsys)
     assert rc == 0

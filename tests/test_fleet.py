@@ -1,0 +1,322 @@
+"""Fleet analyzer tests (DESIGN.md §11): whole-module bottleneck
+reports — per-op pricing on both machine dialects, roll-up conservation,
+report round-trips and caching through the AnalysisService store, the
+bundled HLO dumps and their checked-in goldens, the CI gate
+(scripts/fleet_gate.py) failing on injected regressions, and the CLI
+surface (python -m repro fleet)."""
+import importlib.util
+import json
+import pathlib
+import shutil
+
+import pytest
+
+from repro import cli, configs
+from repro.core import api
+from repro.fleet import (DEFAULT_MACHINES, DUMP_DIR, FleetAnalyzer,
+                         FleetReport, MachineRates, dump_configs,
+                         load_program, machine_label, price_op)
+from repro.core.hlo_analysis import OpCost
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+GOLDEN_DIR = ROOT / "benchmarks" / "golden" / "fleet"
+
+# a small but representative module: a trip-annotated while holding a
+# dot, elementwise work, and an all-reduce, plus entry-level ops
+TOY_HLO = """\
+HloModule toy_fleet
+
+%body (bp: (f32[64,64])) -> (f32[64,64]) {
+  %bp = (f32[64,64]{1,0}) parameter(0)
+  %gte = f32[64,64]{1,0} get-tuple-element(%bp), index=0
+  %dot = f32[64,64]{1,0} dot(%gte, %gte), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %add = f32[64,64]{1,0} add(%dot, %gte)
+  %ar = f32[64,64]{1,0} all-reduce(%add), replica_groups={{0,1,2,3}}, to_apply=%sum
+  ROOT %bt = (f32[64,64]{1,0}) tuple(%ar)
+}
+
+%cond (cp: (f32[64,64])) -> pred[] {
+  %cp = (f32[64,64]{1,0}) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main (p: f32[64,64]) -> f32[64,64] {
+  %p = f32[64,64]{1,0} parameter(0)
+  %t = (f32[64,64]{1,0}) tuple(%p)
+  %w = (f32[64,64]{1,0}) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  %g = f32[64,64]{1,0} get-tuple-element(%w), index=0
+  ROOT %out = f32[64,64]{1,0} multiply(%g, %g)
+}
+"""
+
+
+def _load_gate():
+    spec = importlib.util.spec_from_file_location(
+        "fleet_gate", ROOT / "scripts" / "fleet_gate.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ----------------------------------------------------------------------
+# MachineRates: both machine dialects
+# ----------------------------------------------------------------------
+
+def test_machine_rates_x86_dialect():
+    mach = api.resolve_machine("IVY")
+    r = MachineRates.from_machine(mach)
+    assert r.kind == "x86"
+    # 8 FLOP/cy DP x 3.0 GHz x 10 cores = 240 GFLOP/s, one rate for
+    # both execution classes; memory and wire both at main memory BW
+    assert r.mxu_peak == pytest.approx(240e9)
+    assert r.vpu_peak == r.mxu_peak
+    assert r.mem_bandwidth == pytest.approx(47.2e9, rel=1e-6)
+    assert r.wire_bandwidth == r.mem_bandwidth
+    assert r.fingerprint == mach.fingerprint
+
+
+def test_machine_rates_tpu_dialect():
+    mach = api.resolve_machine("V5E")
+    r = MachineRates.from_machine(mach, "BF16")
+    assert r.kind == "tpu"
+    assert r.mxu_peak == pytest.approx(float(mach.peak_flops["BF16"]))
+    assert r.mem_bandwidth == pytest.approx(float(mach.hbm_bandwidth))
+    assert r.mxu_peak > r.vpu_peak > 0
+    with pytest.raises(ValueError, match="no peak flops for dtype"):
+        MachineRates.from_machine(mach, "FP64")
+
+
+def test_price_op_bound_classes():
+    r = MachineRates(machine="m", fingerprint="fp", kind="tpu",
+                     mxu_peak=100.0, vpu_peak=10.0, mem_bandwidth=50.0,
+                     wire_bandwidth=5.0)
+    op = OpCost(name="o", opcode="dot", computation="e", shape="f32[2]",
+                multiplier=1, mxu_flops=200.0, vpu_flops=10.0,
+                hbm_bytes=50.0, wire_bytes=5.0)
+    p = price_op(op, r)
+    assert (p.t_mxu, p.t_vpu, p.t_memory, p.t_collective) == (2, 1, 1, 1)
+    assert p.bound == "MXU" and p.t_pred == 2.0 and p.t_serial == 4.0
+    # roofline vs ECM composition: MXU/VPU overlap, transfers serialize
+    assert p.t_compute == 2.0
+
+
+def test_machine_label_stability():
+    assert machine_label("IVY") == "ivybridge_ep"
+    assert machine_label("V5E") == "tpu_v5e"
+    assert machine_label("path/to/tpu_v5e.yaml") == "tpu_v5e"
+    assert machine_label(api.resolve_machine("IVY")) \
+        == "ivybridge_ep_10c_3.0ghz" or "ivy" in machine_label(
+            api.resolve_machine("IVY")).lower()
+
+
+# ----------------------------------------------------------------------
+# FleetAnalyzer on a toy module: report shape + conservation
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("machine", DEFAULT_MACHINES)
+def test_toy_report_shape_and_conservation(machine):
+    rep = FleetAnalyzer().analyze(TOY_HLO, machine)
+    assert isinstance(rep, FleetReport) and rep.conserved
+    assert rep.totals["n_ops"] == 4          # dot, add, ar (x7), multiply
+    assert rep.totals["n_collectives"] == 1
+    # while-body ops carry the trip multiplier into the ranking
+    by_name = {d["name"]: d for d in rep.top_ops}
+    assert by_name["dot"]["multiplier"] == 7
+    assert by_name["out"]["multiplier"] == 1
+    # graph times compose sensibly: serial >= overlapped > 0
+    assert rep.t_graph_serial >= rep.t_graph > 0
+    # bound shares sum to 1 over the classes that have time
+    assert sum(b["share"] for b in rep.bounds.values()) \
+        == pytest.approx(1.0)
+    assert rep.bottleneck in rep.bounds
+    # layers partition the ops
+    assert sum(d["ops"] for d in rep.layers) == rep.totals["n_ops"]
+    # rendering mentions the essentials
+    txt = rep.render()
+    assert f"Fleet report: {rep.config}" in txt and "bound mix:" in txt
+
+
+def test_report_round_trip_exact():
+    rep = FleetAnalyzer().analyze(TOY_HLO, "V5E")
+    d = rep.to_dict()
+    assert d["kind"] == "fleet-report" and d["schema"] == 1
+    rebuilt = FleetReport.from_dict(json.loads(json.dumps(d)))
+    assert rebuilt.to_dict() == d
+    with pytest.raises(ValueError, match="not a fleet-report"):
+        FleetReport.from_dict({**d, "schema": 999})
+
+
+def test_fleet_reports_served_from_disk(tmp_path):
+    an1 = FleetAnalyzer(cache_dir=tmp_path)
+    rep1 = an1.analyze(TOY_HLO, "V5E")
+    assert an1.service.stats.computed >= 1
+    # fresh analyzer over the same store: pure disk hit, no rebuild
+    an2 = FleetAnalyzer(cache_dir=tmp_path)
+    rep2 = an2.analyze(TOY_HLO, "V5E")
+    assert an2.service.stats.disk_hits == 1
+    assert an2.service.stats.computed == 0
+    assert rep2.to_dict() == rep1.to_dict()
+    # memory tier: the same analyzer returns the same object
+    assert an2.analyze(TOY_HLO, "V5E") is rep2
+
+
+def test_load_program_rejects_unknown_config():
+    with pytest.raises(FileNotFoundError, match="bundled"):
+        load_program("no-such-config")
+
+
+# ----------------------------------------------------------------------
+# Bundled dumps + goldens: every config, both machines
+# ----------------------------------------------------------------------
+
+def test_every_config_has_a_dump_and_goldens():
+    assert dump_configs() == sorted(configs.ARCH_IDS)
+    labels = [machine_label(m) for m in DEFAULT_MACHINES]
+    missing = [f"{c}__{l}.json" for c in dump_configs() for l in labels
+               if not (GOLDEN_DIR / f"{c}__{l}.json").is_file()]
+    assert not missing, f"goldens missing: {missing}"
+
+
+def test_bundled_dump_analyzes_and_matches_golden_structure():
+    cfg = dump_configs()[0]
+    rep = FleetAnalyzer().analyze(cfg, "V5E")
+    assert rep.conserved and rep.source == f"{cfg}.hlo.gz"
+    golden = json.loads(
+        (GOLDEN_DIR / f"{cfg}__tpu_v5e.json").read_text())
+    # structure is pinned exactly by the gate; spot-check here too
+    assert golden["totals"]["n_ops"] == rep.totals["n_ops"]
+    assert golden["bottleneck"] == rep.bottleneck
+    assert golden["conserved"] is True
+
+
+def test_analyze_all_covers_configs_x_machines(tmp_path):
+    an = FleetAnalyzer(cache_dir=tmp_path, top=5)
+    two = dump_configs()[:2]
+    reps = an.analyze_all(two)
+    assert len(reps) == len(two) * len(DEFAULT_MACHINES)
+    paths = an.write_artifacts(reps, DEFAULT_MACHINES, tmp_path / "out")
+    assert [p.name for p in paths] == [
+        f"{c}__{machine_label(m)}.json"
+        for c in two for m in DEFAULT_MACHINES]
+    for p in paths:
+        assert json.loads(p.read_text())["kind"] == "fleet-report"
+
+
+# ----------------------------------------------------------------------
+# The gate: passes on faithful artifacts, fails on injected regressions
+# ----------------------------------------------------------------------
+
+def test_gate_passes_on_copied_goldens(tmp_path, capsys):
+    gate = _load_gate()
+    art = tmp_path / "art"
+    shutil.copytree(GOLDEN_DIR, art)
+    assert gate.run_gate(art, GOLDEN_DIR, tol=0.05, update=False) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_gate_fails_on_injected_time_regression(tmp_path, capsys):
+    """The acceptance pin: perturb a golden copy's predicted time by 10%
+    (> the 5% tolerance) and the gate must fail, naming the field."""
+    gate = _load_gate()
+    art = tmp_path / "art"
+    shutil.copytree(GOLDEN_DIR, art)
+    victim = sorted(art.glob("*.json"))[0]
+    d = json.loads(victim.read_text())
+    d["t_graph"] *= 1.10
+    victim.write_text(json.dumps(d))
+    assert gate.run_gate(art, GOLDEN_DIR, tol=0.05, update=False) == 1
+    out = capsys.readouterr().out
+    assert f"FAIL {victim.name}" in out and "t_graph" in out
+    # ... while a within-tolerance drift passes
+    d["t_graph"] /= 1.10
+    d["t_graph"] *= 1.03
+    victim.write_text(json.dumps(d))
+    assert gate.run_gate(art, GOLDEN_DIR, tol=0.05, update=False) == 0
+
+
+def test_gate_fails_on_structural_changes(tmp_path, capsys):
+    gate = _load_gate()
+    art = tmp_path / "art"
+    shutil.copytree(GOLDEN_DIR, art)
+    victim = sorted(art.glob("*.json"))[0]
+    d = json.loads(victim.read_text())
+    golden = json.loads(victim.read_text())
+    d["totals"]["n_ops"] += 1
+    d["conserved"] = False
+    victim.write_text(json.dumps(d))
+    assert gate.compare(d, golden, tol=0.05)     # per-pair API too
+    assert gate.run_gate(art, GOLDEN_DIR, tol=0.05, update=False) == 1
+    out = capsys.readouterr().out
+    assert "n_ops" in out and "conserved" in out
+
+
+def test_gate_fails_on_missing_pairs(tmp_path, capsys):
+    gate = _load_gate()
+    art = tmp_path / "art"
+    shutil.copytree(GOLDEN_DIR, art)
+    extra = art / "new-config__tpu_v5e.json"
+    shutil.copyfile(sorted(art.glob("*.json"))[0], extra)
+    removed = sorted(art.glob("*.json"))[1]
+    removed.unlink()
+    assert gate.run_gate(art, GOLDEN_DIR, tol=0.05, update=False) == 1
+    out = capsys.readouterr().out
+    assert "artifact has no golden" in out and "golden has no artifact" in out
+
+
+def test_gate_update_goldens_rebaselines(tmp_path, capsys):
+    gate = _load_gate()
+    art, gold = tmp_path / "art", tmp_path / "gold"
+    shutil.copytree(GOLDEN_DIR, art)
+    # empty golden dir -> rc 2 with a hint, not a silent pass
+    gold.mkdir()
+    assert gate.run_gate(art, gold, tol=0.05, update=False) == 2
+    # baseline, add a stale golden, re-baseline: stale removed, gate green
+    assert gate.run_gate(art, gold, tol=0.05, update=True) == 0
+    stale = gold / "gone-config__tpu_v5e.json"
+    shutil.copyfile(sorted(gold.glob("*.json"))[0], stale)
+    assert gate.run_gate(art, gold, tol=0.05, update=True) == 0
+    assert not stale.exists()
+    assert gate.run_gate(art, gold, tol=0.05, update=False) == 0
+    # no artifacts at all -> rc 2
+    assert gate.run_gate(tmp_path / "empty", gold, tol=0.05,
+                         update=False) == 2
+
+
+# ----------------------------------------------------------------------
+# CLI surface: python -m repro fleet
+# ----------------------------------------------------------------------
+
+def run_cli(argv, capsys):
+    rc = cli.main(argv)
+    cap = capsys.readouterr()
+    return rc, cap.out, cap.err
+
+
+def test_cli_fleet_single_config_text_and_artifact(tmp_path, capsys):
+    cfg = dump_configs()[0]
+    out_dir = tmp_path / "fleet"
+    rc, out, _ = run_cli(["fleet", "--config", cfg, "-m", "V5E",
+                          "--out", str(out_dir)], capsys)
+    assert rc == 0
+    assert f"Fleet report: {cfg}" in out and "bound mix:" in out
+    assert "wrote 1 artifact(s)" in out
+    assert (out_dir / f"{cfg}__tpu_v5e.json").is_file()
+
+
+def test_cli_fleet_json_round_trips(tmp_path, capsys):
+    cfg = dump_configs()[0]
+    rc, out, _ = run_cli(["fleet", "--config", cfg, "--out", "-",
+                          "--json"], capsys)
+    assert rc == 0
+    payload = json.loads(out)
+    assert len(payload) == len(DEFAULT_MACHINES)
+    for d in payload:
+        rebuilt = FleetReport.from_dict(d)
+        assert rebuilt.to_dict() == d and d["conserved"] is True
+
+
+def test_cli_fleet_unknown_config_fails_cleanly(capsys):
+    rc, _, err = run_cli(["fleet", "--config", "no-such-config",
+                          "--out", "-"], capsys)
+    assert rc != 0
+    assert "no-such-config" in err

@@ -295,3 +295,135 @@ def test_vpu_only_program_gets_compute_term():
     assert res.t_compute == pytest.approx(res.vpu_flops
                                           / res.vpu_peak_flops)
     assert res.arithmetic_intensity > 0
+
+
+# ----------------------------------------------------------------------
+# Property: per-op roll-up conservation on randomized fusion/while nests
+# (the fleet analyzer's invariant; ISSUE 8 satellite)
+# ----------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+_T16 = "f32[16,16]{1,0}"
+_EW_OPS = ("add", "multiply", "maximum", "subtract")
+_COLL_KINDS = ("all-reduce", "all-gather", "all-to-all",
+               "collective-permute")
+
+
+def _nest_module(trips, ew, kind, with_coll, with_fusion, inner) -> str:
+    """A synthetic module: a chain of trip-annotated whiles whose bodies
+    hold a dot, an elementwise chain, optionally a collective, a fusion
+    (exp+multiply inside), and — in the first body — an inner while."""
+    comps, entry = [], ["  %p = f32[16,16]{1,0} parameter(0)\n"]
+    prev = "p"
+    for i, t in enumerate(trips):
+        body = [
+            f"  %bp{i} = ({_T16}) parameter(0)\n",
+            f"  %gte{i} = {_T16} get-tuple-element(%bp{i}), index=0\n",
+            f"  %dot{i} = {_T16} dot(%gte{i}, %gte{i}), "
+            "lhs_contracting_dims={1}, rhs_contracting_dims={0}\n"]
+        cur = f"dot{i}"
+        for j in range(ew):
+            op = _EW_OPS[j % len(_EW_OPS)]
+            body.append(f"  %e{i}_{j} = {_T16} {op}(%{cur}, %gte{i})\n")
+            cur = f"e{i}_{j}"
+        if with_coll:
+            body.append(f"  %c{i} = {_T16} {kind}(%{cur}), "
+                        "replica_groups={{0,1,2,3}}, to_apply=%sum\n")
+            cur = f"c{i}"
+        if with_fusion:
+            comps.append(
+                f"%fused_{i} (fp{i}: f32[16,16]) -> f32[16,16] {{\n"
+                f"  %fp{i} = {_T16} parameter(0)\n"
+                f"  %fe{i} = {_T16} exponential(%fp{i})\n"
+                f"  ROOT %fm{i} = {_T16} multiply(%fe{i}, %fe{i})\n"
+                "}\n")
+            body.append(f"  %fu{i} = {_T16} fusion(%{cur}), kind=kLoop, "
+                        f"calls=%fused_{i}\n")
+            cur = f"fu{i}"
+        if inner and i == 0:
+            comps.append(
+                f"%ibody_{i} (ibp{i}: (f32[16,16])) -> (f32[16,16]) {{\n"
+                f"  %ibp{i} = ({_T16}) parameter(0)\n"
+                f"  %igte{i} = {_T16} get-tuple-element(%ibp{i}), index=0\n"
+                f"  %im{i} = {_T16} multiply(%igte{i}, %igte{i})\n"
+                f"  ROOT %ibt{i} = ({_T16}) tuple(%im{i})\n"
+                "}\n")
+            comps.append(
+                f"%icond_{i} (icp{i}: (f32[16,16])) -> pred[] {{\n"
+                f"  %icp{i} = ({_T16}) parameter(0)\n"
+                f"  ROOT %ilt{i} = pred[] constant(false)\n"
+                "}\n")
+            body += [
+                f"  %it{i} = ({_T16}) tuple(%{cur})\n",
+                f"  %iw{i} = ({_T16}) while(%it{i}), "
+                f"condition=%icond_{i}, body=%ibody_{i}, "
+                f'backend_config={{"known_trip_count":{{"n":"{inner}"}}}}\n',
+                f"  %ig{i} = {_T16} get-tuple-element(%iw{i}), index=0\n"]
+            cur = f"ig{i}"
+        body.append(f"  ROOT %bt{i} = ({_T16}) tuple(%{cur})\n")
+        comps.append(f"%body_{i} (bp{i}: (f32[16,16])) -> (f32[16,16]) {{\n"
+                     + "".join(body) + "}\n")
+        comps.append(f"%cond_{i} (cp{i}: (f32[16,16])) -> pred[] {{\n"
+                     f"  %cp{i} = ({_T16}) parameter(0)\n"
+                     f"  ROOT %lt{i} = pred[] constant(false)\n"
+                     "}\n")
+        entry += [
+            f"  %t{i} = ({_T16}) tuple(%{prev})\n",
+            f"  %w{i} = ({_T16}) while(%t{i}), condition=%cond_{i}, "
+            f"body=%body_{i}, "
+            f'backend_config={{"known_trip_count":{{"n":"{t}"}}}}\n',
+            f"  %g{i} = {_T16} get-tuple-element(%w{i}), index=0\n"]
+        prev = f"g{i}"
+    entry.append(f"  ROOT %out = {_T16} add(%{prev}, %{prev})\n")
+    return ("HloModule m\n\n" + "\n".join(comps)
+            + "\nENTRY %main (p: f32[16,16]) -> f32[16,16] {\n"
+            + "".join(entry) + "}\n")
+
+
+@settings(max_examples=25, deadline=None)
+@given(trips=st.lists(st.integers(1, 5), min_size=1, max_size=3),
+       ew=st.integers(0, 3),
+       kind=st.sampled_from(_COLL_KINDS),
+       with_coll=st.booleans(),
+       with_fusion=st.booleans(),
+       inner=st.integers(0, 4))
+def test_per_op_rollup_conserves_on_random_nests(trips, ew, kind,
+                                                 with_coll, with_fusion,
+                                                 inner):
+    """analyze_hlo_text(per_op=True): summing any OpCost field over the
+    records reproduces the module total, on arbitrary while/fusion nests;
+    per_op recording never perturbs the totals themselves."""
+    txt = _nest_module(trips, ew, kind, with_coll, with_fusion, inner)
+    ana = H.analyze_hlo_text(txt, per_op=True)
+    base = H.analyze_hlo_text(txt)
+    # recording is observation-only: totals match the plain walk exactly
+    assert (ana.mxu_flops, ana.vpu_flops, ana.hbm_bytes,
+            ana.collective_wire_bytes) == \
+        (base.mxu_flops, base.vpu_flops, base.hbm_bytes,
+         base.collective_wire_bytes)
+    # conservation: per-op sums == module totals (same accumulations)
+    assert sum(o.mxu_flops for o in ana.ops) == \
+        pytest.approx(ana.mxu_flops, rel=1e-12)
+    assert sum(o.vpu_flops for o in ana.ops) == \
+        pytest.approx(ana.vpu_flops, rel=1e-12)
+    assert sum(o.hbm_bytes for o in ana.ops) == \
+        pytest.approx(ana.hbm_bytes, rel=1e-12)
+    assert sum(o.wire_bytes for o in ana.ops) == \
+        pytest.approx(ana.collective_wire_bytes, rel=1e-12)
+    # trip counts: every record in body_i carries multiplier trips[i],
+    # and the inner while nests multiplicatively under trips[0]
+    for i, t in enumerate(trips):
+        recs = [o for o in ana.ops if o.computation == f"body_{i}"]
+        assert recs and all(o.multiplier == t for o in recs)
+    if inner:
+        recs = [o for o in ana.ops if o.computation == "ibody_0"]
+        assert recs and all(o.multiplier == trips[0] * inner for o in recs)
+    # fusion boundary: internal flops fold into the owning fusion record
+    if with_fusion:
+        fus = [o for o in ana.ops if o.opcode == "fusion"]
+        assert len(fus) == len(trips)
+        for i, o in enumerate(sorted(fus, key=lambda o: o.computation)):
+            assert o.vpu_flops == 2 * 256 * o.multiplier   # exp + multiply

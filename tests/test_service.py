@@ -386,6 +386,53 @@ def test_worker_pool_rejects_non_loop_sources():
 
 
 # ----------------------------------------------------------------------
+# Worker pool: failure paths (REPRO_WORKER_FAULT injection)
+# ----------------------------------------------------------------------
+
+_FAULT_VALUES = list(range(100, 400, 20))    # 15 points, 2 shards
+
+
+def test_worker_crash_mid_shard_surfaces_no_hang(monkeypatch):
+    """A worker hard-exiting mid-shard must surface as BrokenProcessPool
+    from the merge — promptly, not as a hang on a dead future."""
+    from concurrent.futures.process import BrokenProcessPool
+    monkeypatch.setenv("REPRO_WORKER_FAULT", "exit")
+    with pytest.raises(BrokenProcessPool):
+        sweep_sharded(_kernel(), api.resolve_machine("IVY"), "N",
+                      _FAULT_VALUES, workers=2)
+
+
+def test_worker_exception_propagates_with_message(monkeypatch):
+    monkeypatch.setenv("REPRO_WORKER_FAULT", "raise")
+    with pytest.raises(RuntimeError, match="injected worker fault"):
+        sweep_sharded(_kernel(), api.resolve_machine("IVY"), "N",
+                      _FAULT_VALUES, workers=2)
+
+
+def test_worker_failure_leaves_no_partial_store_entries(tmp_path,
+                                                        monkeypatch):
+    """A failed sharded sweep through the service writes nothing to the
+    ResultStore and doesn't poison the in-memory/single-flight tiers:
+    the same request recomputes cleanly once the fault clears."""
+    svc = AnalysisService(cache_dir=tmp_path)
+    monkeypatch.setenv("REPRO_WORKER_FAULT", "raise")
+    with pytest.raises(RuntimeError, match="injected worker fault"):
+        svc.sweep(STENCIL, "IVY", "N", _FAULT_VALUES,
+                  constants={"M": 130}, workers=2)
+    assert svc.store.summary()["entries"] == 0
+    assert svc.stats.computed == 0
+
+    monkeypatch.delenv("REPRO_WORKER_FAULT")
+    out = svc.sweep(STENCIL, "IVY", "N", _FAULT_VALUES,
+                    constants={"M": 130}, workers=2)
+    assert svc.stats.computed == 1 and svc.store.summary()["entries"] == 1
+    seq = AnalysisSession(api.resolve_machine("IVY")).sweep(
+        _kernel(), "N", _FAULT_VALUES)
+    assert [r.to_dict() for r in out["ecm"]] \
+        == [r.to_dict() for r in seq["ecm"]]
+
+
+# ----------------------------------------------------------------------
 # CLI surface
 # ----------------------------------------------------------------------
 
