@@ -16,7 +16,7 @@ from benchmarks import (cli_smoke, incore_bench, kernels_bench, paper_ecm,
                         paper_fig5, paper_fig34, paper_listing4,
                         paper_listing5, paper_table1, roofline_table,
                         service_bench, session_cache, sim_bench,
-                        sweep_bench, tpu_ecm)
+                        sweep_bench, tpu_ecm, tune_bench)
 
 # every section takes the parsed args so speed gates can honor --enforce
 SECTIONS = [
@@ -45,6 +45,8 @@ SECTIONS = [
      lambda a: tpu_ecm.run()),
     ("Pallas kernels — interpret timing + v5e predictions",
      lambda a: kernels_bench.run()),
+    ("Autotuner — predict/measure/calibrate loop",
+     lambda a: tune_bench.run(enforce=a.enforce)),
     ("§Roofline — dry-run artifacts table", lambda a: roofline_table.run()),
     ("CLI — kerncraft-style analyze reproduces Listing 4",
      lambda a: cli_smoke.run()),
@@ -67,6 +69,8 @@ SMOKE = [
      lambda a: session_cache.run(points=20)),
     ("Analysis service — disk cache, coalescing, worker pool (smoke)",
      lambda a: service_bench.run(smoke=True, enforce=a.enforce)),
+    ("Autotuner — predict/measure/calibrate loop (smoke)",
+     lambda a: tune_bench.run(smoke=True, enforce=a.enforce)),
     ("CLI — kerncraft-style analyze reproduces Listing 4",
      lambda a: cli_smoke.run()),
 ]

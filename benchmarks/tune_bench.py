@@ -1,0 +1,134 @@
+"""Autotuner benchmark: the predict→measure→calibrate loop (DESIGN.md §12),
+pinning three properties:
+
+1. **Analytic ranking speed** — scoring ≥500 flash-attention candidates
+   through the closed-form predictor (and the stencil families through
+   the compiled grid_search plan) takes well under a second warm; the
+   full enumerate+predict pass is what makes measuring only a top-k
+   shortlist affordable.
+2. **Chosen beats default** — an in-process measured tune run (interpret
+   mode) picks a configuration no slower than the shipped default:
+   ``speedup_vs_default >= 1.0``.  Hard assertion — the default is in
+   the measured shortlist, so the argmin can never do worse.
+3. **Warm replay** — a TuneReport served twice through the analysis
+   service computes exactly once; a fresh service over the same cache
+   dir decodes the stored payload with zero recompute and a
+   bit-identical report.
+
+Speed targets are reported (and written to
+``benchmarks/out/tune_bench.json`` for the CI artifact trail); a miss is
+only fatal under ``--enforce``.  Properties 2 and 3 are hard assertions
+at any load.
+
+    PYTHONPATH=src python -m benchmarks.tune_bench [--smoke] [--enforce]
+"""
+import argparse
+import json
+import pathlib
+import tempfile
+import time
+
+from repro.core import machine as machine_mod
+from repro.service import AnalysisService
+from repro.tune import resolve_space, tune
+
+RANK_TARGET_S = 1.0             # warm enumerate+predict, >=500 candidates
+RANK_SHAPE = {"seq_q": 1024, "seq_kv": 2048}
+MEASURE_SHAPE = {"seq_q": 256, "seq_kv": 256, "heads": 1}
+OUT_JSON = pathlib.Path(__file__).resolve().parent / "out" / \
+    "tune_bench.json"
+
+
+def run(smoke: bool = False, enforce: bool = False) -> str:
+    mach = machine_mod.load("V5E")
+    lines = []
+    report = {"smoke": smoke}
+
+    # 1. analytic ranking speed (warm: second pass, plans/sessions hot)
+    sp = resolve_space("flash_attention", mach, **RANK_SHAPE)
+    cands = sp.candidates()
+    assert len(cands) >= 500, len(cands)
+    sp.predict(cands)                       # warm
+    t0 = time.perf_counter()
+    preds = sp.predict(cands)
+    rank_s = time.perf_counter() - t0
+    n_feas = sum(1 for p in preds if p.feasible)
+    lines.append(f"analytic ranking: {len(cands)} flash candidates "
+                 f"({n_feas} feasible) in {rank_s * 1e3:.1f} ms warm "
+                 f"(target < {RANK_TARGET_S:.1f} s)")
+    report.update(candidates=len(cands), feasible=n_feas,
+                  rank_warm_s=rank_s, rank_target_s=RANK_TARGET_S)
+    rank_ok = rank_s < RANK_TARGET_S
+    if enforce:
+        assert rank_ok, f"ranking took {rank_s:.3f}s"
+
+    # stencil ranking rides the compiled grid_search plan
+    sp2 = resolve_space("stencil3d7pt", mach)
+    t0 = time.perf_counter()
+    sp2.predict(sp2.candidates())
+    report["stencil_rank_s"] = time.perf_counter() - t0
+    lines.append(f"stencil ranking via compiled grid_search: "
+                 f"{report['stencil_rank_s'] * 1e3:.1f} ms")
+
+    # 2. measured tune: chosen no slower than default (interpret mode,
+    # in-process — subprocess isolation is exercised by the test suite)
+    top_k = 1 if smoke else 2
+    reps = 2
+    t0 = time.perf_counter()
+    rep = tune("flash_attention", mach, config=MEASURE_SHAPE, top_k=top_k,
+               reps=reps, warmup=1, isolate=False)
+    tune_s = time.perf_counter() - t0
+    assert rep.speedup_vs_default is not None, "nothing measured"
+    assert rep.speedup_vs_default >= 1.0, rep.speedup_vs_default
+    assert rep.n_failed == 0, rep.render()
+    lines.append(f"measured tune ({len(rep.measured_outcomes)} candidates, "
+                 f"{tune_s:.1f} s): chosen {rep.chosen_params} "
+                 f"{rep.measured_chosen_s * 1e3:.2f} ms vs default "
+                 f"{rep.default_params} "
+                 f"{rep.measured_default_s * 1e3:.2f} ms "
+                 f"-> {rep.speedup_vs_default:.2f}x (hard floor 1.0x)")
+    report.update(tune_wall_s=tune_s,
+                  chosen=rep.chosen_params, default=rep.default_params,
+                  measured_chosen_s=rep.measured_chosen_s,
+                  measured_default_s=rep.measured_default_s,
+                  speedup_vs_default=rep.speedup_vs_default,
+                  rms_log_error=rep.error.get("rms_log"))
+
+    # 3. warm replay through the service: zero recompute, bit-identical
+    with tempfile.TemporaryDirectory() as tmp:
+        svc = AnalysisService(cache_dir=tmp)
+        r1 = tune("flash_attention", mach, config=MEASURE_SHAPE,
+                  measure=False, service=svc)
+        assert svc.stats.computed == 1
+        t0 = time.perf_counter()
+        r2 = tune("flash_attention", mach, config=MEASURE_SHAPE,
+                  measure=False, service=svc)
+        warm_s = time.perf_counter() - t0
+        assert svc.stats.computed == 1, "warm replay recomputed"
+        assert r2.to_dict() == r1.to_dict()
+        svc2 = AnalysisService(cache_dir=tmp)
+        t0 = time.perf_counter()
+        r3 = tune("flash_attention", mach, config=MEASURE_SHAPE,
+                  measure=False, service=svc2)
+        disk_s = time.perf_counter() - t0
+        assert svc2.stats.computed == 0, "disk replay recomputed"
+        assert svc2.stats.disk_hits == 1
+        assert r3.to_dict() == r1.to_dict()
+    lines.append(f"service replay: memory hit {warm_s * 1e3:.2f} ms, "
+                 f"fresh-service disk hit {disk_s * 1e3:.2f} ms, "
+                 f"0 recomputes, payloads bit-identical")
+    report.update(replay_memory_s=warm_s, replay_disk_s=disk_s,
+                  rank_ok=rank_ok)
+
+    OUT_JSON.parent.mkdir(parents=True, exist_ok=True)
+    OUT_JSON.write_text(json.dumps(report, indent=2, sort_keys=True))
+    lines.append(f"wrote {OUT_JSON.relative_to(OUT_JSON.parents[2])}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--enforce", action="store_true")
+    args = ap.parse_args()
+    print(run(smoke=args.smoke, enforce=args.enforce))

@@ -34,6 +34,7 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import pathlib
 import sys
 
 from repro.core import LoopKernel, api, blocking, reports
@@ -235,6 +236,58 @@ def build_parser() -> argparse.ArgumentParser:
                          "skip the module walk entirely)")
     sp.add_argument("--json", action="store_true",
                     help="emit the full report payloads as JSON")
+
+    sp = sub.add_parser("tune",
+                        help="model-driven autotuner: rank a kernel "
+                             "family's configurations analytically, "
+                             "measure the top-k with real timers, derive "
+                             "machine calibration factors")
+    sp.add_argument("family",
+                    help="kernel family: flash_attention, stencil3d7pt, "
+                         "or longrange3d")
+    sp.add_argument("-m", "--machine", required=True,
+                    help="machine description: short name (IVY, V5E), "
+                         "bundled yaml name, or path")
+    sp.add_argument("--shape", nargs=2, action="append", default=[],
+                    metavar=("NAME", "VALUE"),
+                    help="override a problem-shape value, e.g. --shape "
+                         "seq_q 2048 (repeatable; see the family's "
+                         "defaults in docs/autotune.md)")
+    sp.add_argument("--top-k", type=int, default=4,
+                    help="predicted-best candidates to measure, beyond "
+                         "the shipped default (default 4)")
+    meas = sp.add_mutually_exclusive_group()
+    meas.add_argument("--measure", dest="measure", action="store_true",
+                      default=True,
+                      help="measure the shortlist with real timers "
+                           "(default)")
+    meas.add_argument("--no-measure", dest="measure", action="store_false",
+                      help="stop after the analytic ranking")
+    sp.add_argument("--warmup", type=int, default=1,
+                    help="untimed invocations per candidate (default 1)")
+    sp.add_argument("--reps", type=int, default=3,
+                    help="timed samples per candidate; the reported wall "
+                         "is the IQR-robust median (default 3)")
+    sp.add_argument("--timeout-s", type=float, default=120.0,
+                    help="per-candidate subprocess wall clock "
+                         "(default 120)")
+    sp.add_argument("--no-isolate", dest="isolate", action="store_false",
+                    default=True,
+                    help="time in-process instead of per-candidate "
+                         "subprocesses (faster, no crash/timeout "
+                         "protection)")
+    sp.add_argument("--apply-calibration", nargs="?", const="auto",
+                    default=None, metavar="YAML",
+                    help="write the derived calibration factors into the "
+                         "machine YAML (default: the file -m resolved "
+                         "to); models apply them behind the opt-in "
+                         "calibrated=True flag")
+    sp.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persist the TuneReport in the disk-backed "
+                         "result cache (kind 'tune'; warm replays skip "
+                         "prediction and measurement)")
+    sp.add_argument("--json", action="store_true",
+                    help="emit the TuneReport as JSON")
 
     sp = sub.add_parser("cache",
                         help="inspect or clear a disk-backed result cache")
@@ -579,6 +632,45 @@ def cmd_blocking(args) -> int:
     return 0
 
 
+def cmd_tune(args) -> int:
+    from repro import tune as tune_mod
+    machine = api.resolve_machine(args.machine)
+    config = {}
+    for name, value in args.shape:
+        try:
+            config[name] = int(value)
+        except ValueError:
+            config[name] = value        # dtype=..., causal=... stay strings
+    service = _service(args)
+    rep = tune_mod.tune(args.family, machine, config=config or None,
+                        top_k=args.top_k, measure=args.measure,
+                        warmup=args.warmup, reps=args.reps,
+                        timeout_s=args.timeout_s, isolate=args.isolate,
+                        service=service)
+    applied = None
+    if args.apply_calibration is not None:
+        if not rep.calibration:
+            print("warning: no calibration derived (nothing measured "
+                  "successfully); machine YAML left untouched",
+                  file=sys.stderr)
+        else:
+            path = (tune_mod.machine_yaml_path(args.machine)
+                    if args.apply_calibration == "auto"
+                    else pathlib.Path(args.apply_calibration))
+            tune_mod.apply_calibration(path, rep.calibration)
+            applied = str(path)
+    if args.json:
+        payload = rep.to_dict()
+        if applied:
+            payload["calibration_written_to"] = applied
+        print(json.dumps(payload, indent=2, sort_keys=True))
+        return 0
+    print(rep.render())
+    if applied:
+        print(f"calibration written to {applied}")
+    return 0
+
+
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     from repro.core.lint import LintError
@@ -586,7 +678,7 @@ def main(argv=None) -> int:
         return {"analyze": cmd_analyze, "sweep": cmd_sweep,
                 "blocking": cmd_blocking, "lint": cmd_lint,
                 "machine": cmd_machine, "fleet": cmd_fleet,
-                "cache": cmd_cache}[args.command](args)
+                "tune": cmd_tune, "cache": cmd_cache}[args.command](args)
     except LintError as e:
         print(f"error: {e}", file=sys.stderr)
         return 3

@@ -232,6 +232,17 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
     return _attach_report(out, report)
 
 
+def tune(family: str, machine: Machine | str, **opts):
+    """Autotune a Pallas kernel family on ``machine`` — the
+    predict→measure→calibrate loop (:func:`repro.tune.tune`).  Accepts
+    everything the underlying tuner does (``config=``, ``top_k=``,
+    ``measure=``, ``service=``, ...) and returns a
+    :class:`repro.tune.TuneReport`.  Lazy import: prediction-only API
+    users never pay for the tuner's measurement machinery."""
+    from repro.tune import tune as _tune
+    return _tune(family, machine, **opts)
+
+
 def _attach_report(out: dict, report) -> dict:
     """Wrap every sweep result in a ``LintedResult`` carrying ``report``
     (sweep payloads stay pure on the cache/store paths; wrapping happens

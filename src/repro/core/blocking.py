@@ -107,16 +107,21 @@ class GridSearchResult:
     unit of work for ECM (lower is better), flop/s for Roofline variants
     (higher is better) — with shape ``(len(grids[0]),)`` or
     ``(len(grids[0]), len(grids[1]))``.  ``best_result`` is the exact
-    symbolic-path result at the winning point.
+    symbolic-path result at the winning point.  ``ranking`` lists every
+    grid point best-first as ``({symbol: value}, score)`` pairs, with ties
+    resolved exactly like ``best`` (largest tied point wins) — the
+    autotuner (:mod:`repro.tune`) consumes this to pick its measurement
+    shortlist, so ``ranking[0]`` always equals ``(best, best_score)``.
     """
     model: str
-    metric: str                      # 'cy_per_unit' (min) | 'flops' (max)
+    metric: str            # 'cy_per_unit' (min) | 'flops' (max) | 'custom'
     symbols: tuple[str, ...]
     grids: tuple[tuple[int, ...], ...]
     scores: np.ndarray
     best: dict[str, int]
     best_score: float
     best_result: object
+    ranking: tuple = ()    # ((params, score), ...) best-first
 
     def to_dict(self) -> dict:
         return {"model": self.model, "metric": self.metric,
@@ -124,38 +129,74 @@ class GridSearchResult:
                 "grids": [list(g) for g in self.grids],
                 "scores": self.scores.tolist(),
                 "best": dict(self.best), "best_score": self.best_score,
-                "best_result": self.best_result.to_dict()}
+                "best_result": self.best_result.to_dict(),
+                "ranking": [[dict(p), s] for p, s in self.ranking]}
+
+
+def _resolve_metric(model: str, metric) -> tuple[str, str]:
+    """Normalize the ``metric=`` switch into ``(kind, score_model)``:
+    ``kind`` picks the vectorized scorer ('ecm' minimizes t_ecm,
+    'roofline' maximizes flop/s, 'custom' minimizes a callable's output)
+    and ``score_model`` the registered model used for exact-path fallback
+    points.  ``metric=None`` keeps the historical behavior: the scorer is
+    inferred from ``model``."""
+    mname = resolve_model(model).name
+    if metric is None:
+        kind = "roofline" if mname.startswith("roofline") else "ecm"
+    elif callable(metric):
+        kind = "custom"
+    elif str(metric) in ("ecm", "roofline"):
+        kind = str(metric)
+    else:
+        raise ValueError(
+            f"unknown grid_search metric {metric!r}; expected 'ecm', "
+            "'roofline', or a callable over the compiled term arrays")
+    if kind == "roofline":
+        score_model = mname if mname.startswith("roofline") \
+            else "roofline-iaca"
+    else:
+        score_model = "ecm"
+    return kind, score_model
 
 
 def _metric_1d(sess: AnalysisSession, kernel: LoopKernel, symbol: str,
                vals: list[int], model: str, predictor: str, cores: int,
-               opts: dict) -> np.ndarray:
+               opts: dict, metric=None) -> np.ndarray:
     """Vectorized metric over one symbol via the compiled plan; values whose
     ordering the plan cannot batch are scored through the exact path."""
     plan = sess.sweep_plan(kernel, symbol, cores, opts.get("incore"))
     arr = np.asarray(vals, dtype=np.float64)
-    m = resolve_model(model)
-    if m.name.startswith("roofline"):
-        variant = getattr(m, "variant", "IACA")
+    kind, score_model = _resolve_metric(model, metric)
+    if kind == "roofline":
+        variant = getattr(resolve_model(score_model), "variant", "IACA")
         terms = plan.roofline_terms(arr, variant=variant)
         scores, valid = np.asarray(terms["performance"], dtype=np.float64), \
             terms["valid"]
     else:
         terms = plan.ecm_terms(arr)
-        scores, valid = np.asarray(terms["t_ecm"], dtype=np.float64), \
-            terms["valid"]
+        if kind == "custom":
+            scores = np.asarray(metric(terms), dtype=np.float64)
+            if scores.shape != arr.shape:
+                raise ValueError(
+                    "callable grid_search metric must map the compiled "
+                    f"term arrays to one score per point; got shape "
+                    f"{scores.shape} for {arr.shape[0]} points")
+        else:
+            scores = np.asarray(terms["t_ecm"], dtype=np.float64)
+        valid = terms["valid"]
     scores = scores.copy()
     for i in np.flatnonzero(~valid):
-        res = sess.analyze(kernel.bind(**{symbol: vals[i]}), model,
+        res = sess.analyze(kernel.bind(**{symbol: vals[i]}), score_model,
                            predictor=predictor, cores=cores, **opts)
-        scores[i] = res.performance if m.name.startswith("roofline") \
-            else res.t_ecm
+        # custom metrics only see compiled term arrays; points outside the
+        # plan's validity fall back to the exact t_ecm, like 'ecm'
+        scores[i] = res.performance if kind == "roofline" else res.t_ecm
     return scores
 
 
 def grid_search(kernel: LoopKernel, machine: Machine, specs,
                 model: str = "ecm", predictor: str = "LC", cores: int = 1,
-                session: AnalysisSession | None = None,
+                session: AnalysisSession | None = None, metric=None,
                 **opts) -> GridSearchResult:
     """Ab-initio blocking-factor search over a dense 1D/2D parameter grid.
 
@@ -167,6 +208,15 @@ def grid_search(kernel: LoopKernel, machine: Machine, specs,
     cost is ``O(rows × regimes)`` symbolic evaluations instead of
     ``O(rows × cols)``.  The winning point is re-evaluated through the
     exact symbolic path and returned as ``best_result``.
+
+    ``metric`` decouples the score from ``model``: ``"ecm"`` minimizes
+    t_ecm, ``"roofline"`` maximizes flop/s, and a callable receives the
+    compiled ECM term arrays (:meth:`~repro.core.compiled
+    .CompiledSweepPlan.ecm_terms` — ``t_ecm``, ``t_data``, per-level
+    contributions, all vectorized over the grid) and returns one score
+    per point, minimized.  The default ``None`` infers the metric from
+    ``model`` (the historical behavior, pinned by tests).  The full
+    ranked list is returned as ``GridSearchResult.ranking``.
 
     Only analytic predictors can be scored this way: a ``predictor``
     without a compiled closed form (SIM) raises
@@ -184,6 +234,11 @@ def grid_search(kernel: LoopKernel, machine: Machine, specs,
             "grid_search scores the grid through the compiled analytic "
             f"plan, but predictor {predictor!r} has no analytic closed "
             "form to compile")
+    if opts.get("calibrated"):
+        raise ValueError(
+            "grid_search scores grids through the uncalibrated compiled "
+            "plan; apply machine calibration downstream (repro.tune) "
+            "instead of passing calibrated=True here")
     for sym, vs in specs:
         if not vs:
             raise ValueError(f"empty grid for symbol {sym!r}")
@@ -192,7 +247,8 @@ def grid_search(kernel: LoopKernel, machine: Machine, specs,
             f"session is bound to machine {session.machine.name!r}, "
             f"but grid_search was given {machine.name!r}")
     sess = session or AnalysisSession(machine, cores=cores)
-    maximize = resolve_model(model).name.startswith("roofline")
+    kind, _ = _resolve_metric(model, metric)
+    maximize = kind == "roofline"
 
     # LC metrics are piecewise-constant, so whole regimes tie; prefer the
     # *largest* tied grid point — bigger blocks amortize the halo and loop
@@ -204,29 +260,38 @@ def grid_search(kernel: LoopKernel, machine: Machine, specs,
     if len(specs) == 1:
         sym, vals = specs[0]
         scores = _metric_1d(sess, kernel, sym, vals, model, predictor,
-                            cores, opts)
+                            cores, opts, metric)
         idx = _best_flat(scores)
         best = {sym: vals[idx]}
+        params = [{sym: v} for v in vals]
     else:
         (sym0, vals0), (sym1, vals1) = specs
         scores = np.empty((len(vals0), len(vals1)))
         for i, v0 in enumerate(vals0):
             row_kernel = kernel.bind(**{sym0: v0})
             scores[i] = _metric_1d(sess, row_kernel, sym1, vals1, model,
-                                   predictor, cores, opts)
+                                   predictor, cores, opts, metric)
         i, j = divmod(_best_flat(scores), len(vals1))
         best = {sym0: vals0[i], sym1: vals1[j]}
         idx = (i, j)
+        params = [{sym0: v0, sym1: v1} for v0 in vals0 for v1 in vals1]
+    # full ranking, best-first; within a tied score the larger flat index
+    # wins, matching _best_flat — so ranking[0] == (best, best_score)
+    flat = scores.ravel()
+    sign = -1.0 if maximize else 1.0
+    order = np.lexsort((-np.arange(flat.size), sign * flat))
+    ranking = tuple((params[int(k)], float(flat[int(k)])) for k in order)
     best_score = float(scores[idx])
     best_result = sess.analyze(kernel.bind(**best), model,
                                predictor=predictor, cores=cores, **opts)
     return GridSearchResult(
         model=resolve_model(model).name,
-        metric="flops" if maximize else "cy_per_unit",
+        metric=("custom" if kind == "custom"
+                else "flops" if maximize else "cy_per_unit"),
         symbols=tuple(s for s, _ in specs),
         grids=tuple(tuple(vs) for _, vs in specs),
         scores=scores, best=best, best_score=best_score,
-        best_result=best_result)
+        best_result=best_result, ranking=ranking)
 
 
 def _round_down(v: int, granule: int) -> int:

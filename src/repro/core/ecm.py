@@ -39,6 +39,9 @@ class ECMResult:
     # occupation, latency bound) for reports and JSON consumers
     incore_model: str = "simple"
     incore: dict = dataclasses.field(default_factory=dict)
+    # True when the machine's tuned calibration factors were applied to
+    # the in-core and transfer terms (repro.tune feedback loop)
+    calibrated: bool = False
 
     @property
     def t_data(self) -> float:
@@ -105,8 +108,11 @@ class ECMResult:
 
     # --- machine-readable output (DESIGN.md §4) -----------------------
     def to_dict(self) -> dict:
-        """JSON-serializable form; primary fields plus derived summaries."""
-        return {
+        """JSON-serializable form; primary fields plus derived summaries.
+        The ``calibrated`` key is emitted only when True, so every
+        uncalibrated payload stays byte-identical to pre-calibration
+        goldens."""
+        out = {
             "model": "ecm",
             "unit_iterations": self.unit_iterations,
             "t_ol": self.t_ol,
@@ -125,6 +131,9 @@ class ECMResult:
             "saturation_cores": self.saturation_cores,
             "notation": self.notation(),
         }
+        if self.calibrated:
+            out["calibrated"] = True
+        return out
 
     @classmethod
     def from_dict(cls, d: dict) -> "ECMResult":
@@ -138,7 +147,8 @@ class ECMResult:
                    predictor=str(d.get("predictor", "LC")),
                    predictor_params=dict(d.get("predictor_params", {})),
                    incore_model=str(d.get("incore_model", "simple")),
-                   incore=dict(d.get("incore", {})))
+                   incore=dict(d.get("incore", {})),
+                   calibrated=bool(d.get("calibrated", False)))
 
 
 def data_terms(machine: Machine, volumes_bpi: dict,
@@ -167,11 +177,18 @@ def data_terms(machine: Machine, volumes_bpi: dict,
     return serial, overlapped
 
 
+def _scale_terms(machine: Machine, terms: list) -> list:
+    """Scale each transfer term ('VMEM-MEM', cy) by its *source* level's
+    calibration factor (the term label's left-hand level)."""
+    return [(label, cy * machine.calibration_factor(
+        "level", label.split("-", 1)[0])) for label, cy in terms]
+
+
 def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
           cores: int = 1, sim_kwargs: dict | None = None,
           volumes: VolumePrediction | None = None,
           incore_result: InCoreResult | None = None,
-          incore: str = "simple") -> ECMResult:
+          incore: str = "simple", calibrated: bool = False) -> ECMResult:
     """Build the full ECM model: in-core + cache prediction + data terms.
 
     ``predictor`` names a registered :class:`~repro.core.predictors
@@ -182,6 +199,13 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
     from an :class:`~repro.core.session.AnalysisSession`) short-circuits
     the corresponding analysis so sweeps and multi-model reports share
     work (``incore_result`` takes precedence over the ``incore`` name).
+
+    ``calibrated=True`` applies the machine's tuned ``calibration``
+    factors (written by ``repro tune --apply-calibration``): the
+    ``compute`` factor scales T_OL/T_nOL, each ``levels`` factor scales
+    that level's transfer term.  Off by default — an uncalibrated call on
+    a calibrated machine file is bit-identical to one on the pristine
+    file, keeping every existing golden stable.
     """
     unit = kernel.iterations_per_cacheline(machine.cacheline_bytes)
     ic = incore_result or _incore.analyze(kernel, machine, model=incore)
@@ -189,9 +213,17 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
         volumes = predict_volumes(kernel, machine, predictor, cores=cores,
                                   sim_kwargs=sim_kwargs)
     serial, overl = data_terms(machine, volumes.bytes_per_it, unit)
-    return ECMResult(unit_iterations=unit, t_ol=ic.t_ol, t_nol=ic.t_nol,
+    t_ol, t_nol = ic.t_ol, ic.t_nol
+    apply_cal = bool(calibrated and machine.calibration)
+    if apply_cal:
+        f_c = machine.calibration_factor("compute")
+        t_ol, t_nol = t_ol * f_c, t_nol * f_c
+        serial = _scale_terms(machine, serial)
+        overl = _scale_terms(machine, overl)
+    return ECMResult(unit_iterations=unit, t_ol=t_ol, t_nol=t_nol,
                      contributions=serial, overlapped=overl,
                      flops_per_unit=ic.flops_per_unit, clock_hz=machine.clock_hz,
                      predictor=volumes.predictor,
                      predictor_params=dict(volumes.params),
-                     incore_model=ic.model, incore=ic.to_dict())
+                     incore_model=ic.model, incore=ic.to_dict(),
+                     calibrated=apply_cal)

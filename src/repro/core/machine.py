@@ -39,8 +39,9 @@ _TOP_LEVEL_KEYS = frozenset({
     "overlapping ports", "non-overlapping ports", "ports",
     "memory hierarchy", "main memory bandwidth", "benchmarks",
     "peak flops", "hbm bandwidth", "vmem size", "ici link bandwidth",
-    "ici links", "chips", "extra",
+    "ici links", "chips", "extra", "calibration",
 })
+_CALIBRATION_KEYS = frozenset({"compute", "levels", "time", "meta"})
 _PORT_TABLE_KEYS = frozenset({"names", "non-overlapping", "instructions"})
 _PORT_ENTRY_KEYS = frozenset({"ports", "rate", "cycles per op",
                               "bytes per cycle", "latency"})
@@ -73,6 +74,66 @@ def _parse_bw(v: Any) -> float:
         return float(v)
     s = str(v).strip().lower().replace("/s", "")
     return _parse_size(s)
+
+
+def _parse_calibration(d: dict, level_names: list[str]) -> dict:
+    """Validate a machine file's ``calibration:`` section (written by the
+    autotuner, :mod:`repro.tune.calibrate`) into its normalized form:
+
+    - ``compute``: one positive finite factor scaling the in-core cycle
+      terms (T_OL / T_nOL / t_core);
+    - ``levels``: per-memory-level factors scaling that level's transfer
+      term — keys must name declared hierarchy levels;
+    - ``time``: per-kernel-family wall-clock factors the tuner applies to
+      its own seconds-level predictions;
+    - ``meta``: free-form provenance (source report, date, errors).
+
+    Factors are multiplicative measured/predicted ratios; 1.0 is identity.
+    Models only apply them behind an explicit ``calibrated=True`` flag, so
+    a calibrated machine file still reproduces every uncalibrated golden.
+    """
+    if not isinstance(d, dict):
+        raise ValueError(
+            f"'calibration' must be a mapping, got {type(d).__name__}")
+    _check_keys(d, _CALIBRATION_KEYS, "calibration")
+
+    def _factor(v, where: str) -> float:
+        try:
+            f = float(v)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"calibration {where} must be a number, got {v!r}") from None
+        if not math.isfinite(f) or f <= 0:
+            raise ValueError(
+                f"calibration {where} must be a positive finite factor, "
+                f"got {v!r}")
+        return f
+
+    out: dict = {}
+    if "compute" in d:
+        out["compute"] = _factor(d["compute"], "'compute'")
+    for section in ("levels", "time"):
+        sec = d.get(section)
+        if sec is None:
+            continue
+        if not isinstance(sec, dict):
+            raise ValueError(
+                f"calibration {section!r} must be a mapping, "
+                f"got {type(sec).__name__}")
+        out[section] = {str(k): _factor(v, f"{section}[{k!r}]")
+                        for k, v in sec.items()}
+    unknown = sorted(set(out.get("levels", {})) - set(level_names))
+    if unknown:
+        raise ValueError(
+            f"calibration levels name undeclared hierarchy level(s) "
+            f"{unknown}; declared: {level_names}")
+    if "meta" in d:
+        if not isinstance(d["meta"], dict):
+            raise ValueError(
+                "calibration 'meta' must be a mapping, "
+                f"got {type(d['meta']).__name__}")
+        out["meta"] = dict(d["meta"])
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,6 +282,10 @@ class Machine:
     ici_links: int = 4
     chips: int = 1
     extra: dict = dataclasses.field(default_factory=dict)
+    # --- autotuner feedback (repro.tune): measured/predicted factors ---
+    # normalized by _parse_calibration; empty = uncalibrated.  Opt-in:
+    # models scale by these only under calibrated=True.
+    calibration: dict = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------------
     @functools.cached_property
@@ -271,6 +336,22 @@ class Machine:
         if best is None:
             raise ValueError(f"no benchmark result for level {level}")
         return best
+
+    def calibration_factor(self, kind: str, name: str | None = None) -> float:
+        """The multiplicative calibration factor for one term class:
+        ``("compute", None)`` for in-core cycles, ``("level", "VMEM")``
+        for a transfer term, ``("time", family)`` for the tuner's
+        seconds-level family factor.  1.0 when uncalibrated."""
+        if not self.calibration:
+            return 1.0
+        if kind == "compute":
+            return float(self.calibration.get("compute", 1.0))
+        if kind in ("level", "time"):
+            return float(self.calibration.get(
+                kind + "s" if kind == "level" else kind, {}).get(name, 1.0))
+        raise ValueError(
+            f"unknown calibration factor kind {kind!r}; expected "
+            "'compute', 'level', or 'time'")
 
     # ------------------------------------------------------------------
     @classmethod
@@ -345,13 +426,20 @@ class Machine:
             ici_links=int(d.get("ici links", 4)),
             chips=int(d.get("chips", 1)),
             extra=d.get("extra", {}),
+            calibration=_parse_calibration(
+                d["calibration"], [lv.name for lv in levels])
+            if d.get("calibration") else {},
         )
 
     @classmethod
     def from_yaml(cls, path: str | pathlib.Path) -> "Machine":
         path = pathlib.Path(path)
         if not path.exists() and not path.is_absolute():
-            path = _MACHINE_DIR / path
+            bundled = _MACHINE_DIR / path
+            if not bundled.exists() and path.suffix != ".yaml":
+                # accept suffixless bundled names: '-m tpu_v5e'
+                bundled = bundled.with_suffix(".yaml")
+            path = bundled
         with open(path) as f:
             try:
                 d = yaml.safe_load(f)

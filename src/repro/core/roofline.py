@@ -54,6 +54,9 @@ class RooflineResult:
     # and leaves these empty) plus its full scheduler breakdown
     incore_model: str = ""
     incore: dict = dataclasses.field(default_factory=dict)
+    # True when the machine's tuned calibration factors were applied to
+    # the in-core and per-level bandwidth terms (repro.tune feedback loop)
+    calibrated: bool = False
 
     @property
     def predictor_tag(self) -> str:
@@ -80,8 +83,10 @@ class RooflineResult:
     def to_dict(self) -> dict:
         """JSON-serializable form; primary fields plus derived summaries.
         ``model`` carries the registry name so re-dispatching from the
-        serialized record reproduces the same in-core bound."""
-        return {
+        serialized record reproduces the same in-core bound.  The
+        ``calibrated`` key is emitted only when True so uncalibrated
+        payloads stay byte-identical to pre-calibration goldens."""
+        out = {
             "model": ("roofline-iaca" if self.variant.upper() == "IACA"
                       else "roofline"),
             "unit_iterations": self.unit_iterations,
@@ -98,6 +103,9 @@ class RooflineResult:
             "bottleneck": self.bottleneck,
             "performance": self.performance,
         }
+        if self.calibrated:
+            out["calibrated"] = True
+        return out
 
     @classmethod
     def from_dict(cls, d: dict) -> "RooflineResult":
@@ -112,7 +120,8 @@ class RooflineResult:
                    predictor=str(d.get("predictor", "LC")),
                    predictor_params=dict(d.get("predictor_params", {})),
                    incore_model=str(d.get("incore_model", "")),
-                   incore=dict(d.get("incore", {})))
+                   incore=dict(d.get("incore", {})),
+                   calibrated=bool(d.get("calibrated", False)))
 
 
 def terms_arrays(kernel: LoopKernel, machine: Machine, traffic: dict,
@@ -200,27 +209,34 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
           sim_kwargs: dict | None = None,
           volumes: VolumePrediction | None = None,
           incore_result: InCoreResult | None = None,
-          incore: str = "simple") -> RooflineResult:
+          incore: str = "simple",
+          calibrated: bool = False) -> RooflineResult:
     """Roofline model; ``predictor`` names a registered cache predictor
     and ``incore`` a registered in-core model (IACA variant only; the
     classic variant's compute bound is the flops/cy table's P_max).
 
     Like :func:`repro.core.ecm.model`, precomputed ``volumes`` /
     ``incore_result`` (from an AnalysisSession) skip the corresponding
-    analyses.
+    analyses.  ``calibrated=True`` applies the machine's tuned
+    ``calibration`` factors (see :func:`repro.core.ecm.model`): the
+    ``compute`` factor slows the in-core bound, each ``levels`` factor
+    derates that level's effective bandwidth.  Off by default so every
+    uncalibrated golden stays bit-identical.
     """
     unit = kernel.iterations_per_cacheline(machine.cacheline_bytes)
     flops_unit = kernel.flops.total * unit
+    apply_cal = bool(calibrated and machine.calibration)
+    f_c = machine.calibration_factor("compute") if apply_cal else 1.0
 
     # ---- in-core bound -------------------------------------------------
     ic = None
     if variant.upper() == "IACA":
         ic = incore_result or _incore.analyze(kernel, machine, model=incore)
-        t_core = ic.t_core
+        t_core = ic.t_core * f_c
         core_perf = (flops_unit / t_core * machine.clock_hz
                      if t_core > 0 else math.inf)
     else:
-        pmax = _incore.applicable_peak(kernel, machine)     # flop/cy
+        pmax = _incore.applicable_peak(kernel, machine) / f_c   # flop/cy
         core_perf = pmax * machine.clock_hz * cores
         t_core = flops_unit / pmax if pmax else 0.0
 
@@ -241,6 +257,10 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
             bw, bench = machine.measured_bandwidth(label, cores, r, w, rw)
         except (ValueError, KeyError):
             bw, bench = machine.main_memory_bandwidth, "copy"
+        if apply_cal:
+            # a measured/predicted ratio > 1 means transfers take longer
+            # than modeled: derate this level's effective bandwidth
+            bw = bw / machine.calibration_factor("level", lv.name)
         ai = flops_it / vol_it if vol_it > 0 else math.inf
         perf = ai * bw
         t_cy = vol_it * unit * machine.clock_hz / bw if bw else 0.0
@@ -268,4 +288,5 @@ def model(kernel: LoopKernel, machine: Machine, predictor: str = "LC",
                           predictor=volumes.predictor,
                           predictor_params=dict(volumes.params),
                           incore_model=ic.model if ic is not None else "",
-                          incore=ic.to_dict() if ic is not None else {})
+                          incore=ic.to_dict() if ic is not None else {},
+                          calibrated=apply_cal)

@@ -24,6 +24,63 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0 ** 30
 
+#: Starting configurations for the autotuner (:mod:`repro.tune`), keyed by
+#: the smallest kv sequence length the row applies to: ``(block_q,
+#: block_kv)``.  These are the shipped defaults the tuner must beat — the
+#: LC advisor (:func:`repro.core.blocking.attention_tiles`) picks larger
+#: VMEM-filling tiles, this table holds the conservative fallbacks.
+DEFAULT_CONFIGS: tuple[tuple[int, tuple[int, int]], ...] = (
+    (4096, (256, 512)),
+    (1024, (128, 256)),
+    (256, (128, 128)),
+    (0, (8, 128)),
+)
+
+
+def default_config(seq_q: int, seq_kv: int, head_dim: int = 128
+                   ) -> tuple[int, int]:
+    """The default ``(block_q, block_kv)`` for a problem shape: the
+    :data:`DEFAULT_CONFIGS` row for ``seq_kv``, clamped (by halving) to
+    divisors of the actual sequence lengths so the returned pair always
+    passes :func:`validate_blocks`."""
+    for floor, (bq, bkv) in DEFAULT_CONFIGS:
+        if seq_kv >= floor:
+            break
+    bq = max(1, min(bq, seq_q))
+    bkv = max(1, min(bkv, seq_kv))
+    while seq_q % bq:
+        bq //= 2
+    while seq_kv % bkv:
+        bkv //= 2
+    return bq, bkv
+
+
+def validate_blocks(seq_q: int, seq_kv: int, block_q: int,
+                    block_kv: int) -> None:
+    """Reject block sizes that don't tile the sequence lengths.
+
+    The Pallas grid is ``(bh, seq_q // block_q, seq_kv // block_kv)``; a
+    non-dividing block silently drops the remainder rows/columns, so this
+    is a hard error, not a truncation.
+    """
+    if block_q <= 0 or block_kv <= 0:
+        raise ValueError(
+            f"flash_attention block sizes must be positive, got "
+            f"block_q={block_q}, block_kv={block_kv}")
+    if seq_q % block_q:
+        raise ValueError(
+            f"flash_attention: block_q={block_q} does not divide "
+            f"seq_q={seq_q}; the q grid would drop {seq_q % block_q} "
+            f"trailing rows (pick block_q from divisors of {seq_q}, "
+            f"e.g. default_config({seq_q}, {seq_kv}))")
+    if seq_kv % block_kv:
+        raise ValueError(
+            f"flash_attention: block_kv={block_kv} does not divide "
+            f"seq_kv={seq_kv}; the kv grid would drop "
+            f"{seq_kv % block_kv} trailing keys (pick block_kv from "
+            f"divisors of {seq_kv}, e.g. default_config({seq_q}, "
+            f"{seq_kv}))")
+
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             *, scale: float, causal: bool, q_offset: int,
@@ -83,7 +140,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     skv = k.shape[2]
     if q_offset is None:
         q_offset = skv - sq
-    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv)
+    validate_blocks(sq, skv, block_q, block_kv)
     bh = b * h
     qf = q.reshape(bh, sq, d)
     kf = k.reshape(bh, skv, d)

@@ -1,0 +1,123 @@
+"""Property tests for the ab-initio blocking advisors (paper §2.4.2 applied
+to VMEM): tiles fit the budget whenever the minimum tile does, stay
+hardware-aligned, and degrade monotonically as VMEM shrinks."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import blocking
+from repro.core.blocking import LANE, SUBLANE
+
+MiB = 2 ** 20
+
+#: VMEM sizes spanning tiny scratchpads to the v5e's 128 MiB
+VMEMS = st.sampled_from([2 * MiB, 8 * MiB, 32 * MiB, 128 * MiB])
+
+
+# ----------------------------------------------------------------------
+# stencil_blocks
+# ----------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(radius=st.integers(1, 4),
+       k=st.integers(8, 512), j=st.integers(64, 4096),
+       i=st.integers(256, 8192),
+       n_arrays=st.integers(2, 4),
+       elem_bytes=st.sampled_from([4, 8]),
+       vmem=VMEMS)
+def test_stencil_blocks_fit_budget(radius, k, j, i, n_arrays, elem_bytes,
+                                   vmem):
+    b = blocking.stencil_blocks(radius, (k, j, i), n_arrays, elem_bytes,
+                                vmem)
+    assert b.bi % LANE == 0 and b.bj % SUBLANE == 0
+    assert 1 <= b.bk and b.halo == radius
+    at_floor = b.bk == 1 and b.bj == SUBLANE and b.bi == LANE
+    assert b.vmem_bytes <= 0.5 * vmem or at_floor
+
+
+@settings(max_examples=20, deadline=None)
+@given(radius=st.integers(1, 4), elem_bytes=st.sampled_from([4, 8]))
+def test_stencil_blocks_degrade_monotonically(radius, elem_bytes):
+    shape = (128, 2048, 4096)
+    prev = None
+    for vmem in (256 * MiB, 64 * MiB, 16 * MiB, 4 * MiB, 1 * MiB):
+        b = blocking.stencil_blocks(radius, shape, 3, elem_bytes, vmem)
+        if prev is not None:
+            # the block *shape* may trade dimensions (smaller bj frees
+            # room for larger bk), but the working set never grows
+            assert b.vmem_bytes <= prev.vmem_bytes
+        prev = b
+
+
+# ----------------------------------------------------------------------
+# matmul_tiles
+# ----------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(8, 8192), n=st.integers(128, 8192),
+       k=st.integers(128, 16384),
+       elem_bytes=st.sampled_from([2, 4]), vmem=VMEMS)
+def test_matmul_tiles_fit_budget(m, n, k, elem_bytes, vmem):
+    t = blocking.matmul_tiles(m, n, k, elem_bytes, vmem)
+    assert t.bn % LANE == 0 and t.bk % LANE == 0
+    assert t.bm % SUBLANE == 0
+    at_floor = t.bm <= SUBLANE * (LANE // SUBLANE) and t.bn == LANE \
+        and t.bk == LANE
+    assert t.vmem_bytes <= 0.5 * vmem or at_floor
+
+
+@settings(max_examples=20, deadline=None)
+@given(elem_bytes=st.sampled_from([2, 4]))
+def test_matmul_tiles_degrade_monotonically(elem_bytes):
+    prev = None
+    for vmem in (256 * MiB, 64 * MiB, 16 * MiB, 4 * MiB, 1 * MiB):
+        t = blocking.matmul_tiles(4096, 4096, 8192, elem_bytes, vmem)
+        if prev is not None:
+            assert t.vmem_bytes <= prev.vmem_bytes
+            assert (t.bm, t.bn, t.bk) <= (prev.bm, prev.bn, prev.bk)
+        prev = t
+
+
+# ----------------------------------------------------------------------
+# attention_tiles
+# ----------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seq_q=st.integers(128, 65536), seq_kv=st.integers(128, 65536),
+       head_dim=st.sampled_from([64, 128, 256]),
+       elem_bytes=st.sampled_from([2, 4]), vmem=VMEMS)
+def test_attention_tiles_fit_budget(seq_q, seq_kv, head_dim, elem_bytes,
+                                    vmem):
+    t = blocking.attention_tiles(seq_q, seq_kv, head_dim, elem_bytes, vmem)
+    assert t.bq % SUBLANE == 0 and t.bkv % LANE == 0
+    assert t.bq <= max(seq_q, SUBLANE) and t.bkv <= max(seq_kv, LANE)
+    at_floor = t.bq == SUBLANE and t.bkv == LANE
+    assert t.vmem_bytes <= 0.4 * vmem or at_floor
+
+
+@settings(max_examples=20, deadline=None)
+@given(head_dim=st.sampled_from([64, 128, 256]),
+       elem_bytes=st.sampled_from([2, 4]))
+def test_attention_tiles_degrade_monotonically(head_dim, elem_bytes):
+    prev = None
+    for vmem in (256 * MiB, 64 * MiB, 16 * MiB, 4 * MiB, 1 * MiB):
+        t = blocking.attention_tiles(8192, 8192, head_dim, elem_bytes,
+                                     vmem)
+        if prev is not None:
+            assert t.vmem_bytes <= prev.vmem_bytes
+            assert (t.bq, t.bkv) <= (prev.bq, prev.bkv)
+        prev = t
+
+
+def test_attention_tiles_ws_formula_matches_tune_space():
+    """The tune space's feasibility check mirrors the advisor's working-set
+    formula — keep them from drifting apart."""
+    from repro.core import machine as machine_mod
+    from repro.tune import resolve_space
+    m = machine_mod.load("V5E")
+    sp = resolve_space("flash_attention", m, seq_q=1024, seq_kv=1024)
+    t = blocking.attention_tiles(1024, 1024, 128, 2, m.vmem_bytes)
+    assert sp._ws_bytes(t.bq, t.bkv) == pytest.approx(t.vmem_bytes)

@@ -104,3 +104,65 @@ def test_vmem_guard_raises():
     big = jax.ShapeDtypeStruct((3, 9000, 9000), jnp.float32)
     with pytest.raises(ValueError):
         stencil3d7pt(jnp.zeros(big.shape, big.dtype), CVEC)
+
+
+class TestFlashBlockValidation:
+    """Block sizes must tile the sequence lengths (satellite of the
+    autotuner PR): the Pallas grid floor-divides, so a non-dividing block
+    would silently drop trailing rows/keys."""
+
+    def _qkv(self, sq=256, skv=256):
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (1, 1, sq, 128), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1),
+                              (1, 1, skv, 128), jnp.float32)
+        return q, k, k
+
+    def test_bad_block_q_raises(self):
+        from repro.kernels.flash_attention import (
+            flash_attention as raw_flash)
+        q, k, v = self._qkv()
+        with pytest.raises(ValueError, match="block_q=96 does not divide"):
+            raw_flash(q, k, v, block_q=96, block_kv=128)
+
+    def test_bad_block_kv_raises(self):
+        from repro.kernels.flash_attention import (
+            flash_attention as raw_flash)
+        q, k, v = self._qkv()
+        with pytest.raises(ValueError,
+                           match="block_kv=192 does not divide"):
+            raw_flash(q, k, v, block_q=128, block_kv=192)
+
+    def test_nonpositive_blocks_raise(self):
+        from repro.kernels.flash_attention import validate_blocks
+        with pytest.raises(ValueError, match="must be positive"):
+            validate_blocks(256, 256, 0, 128)
+        with pytest.raises(ValueError, match="must be positive"):
+            validate_blocks(256, 256, 128, -8)
+
+    def test_error_names_divisors_helper(self):
+        from repro.kernels.flash_attention import validate_blocks
+        with pytest.raises(ValueError, match="default_config"):
+            validate_blocks(1000, 1000, 128, 128)
+
+    def test_default_config_table(self):
+        """Every DEFAULT_CONFIGS row is reachable and always validates
+        after the divisor clamp, across awkward sequence lengths."""
+        from repro.kernels.flash_attention import (DEFAULT_CONFIGS,
+                                                   default_config,
+                                                   validate_blocks)
+        floors = [f for f, _ in DEFAULT_CONFIGS]
+        assert floors == sorted(floors, reverse=True)
+        assert floors[-1] == 0                  # catch-all row
+        for sq in (8, 48, 256, 1000, 1024, 4096, 12288):
+            for skv in (8, 48, 256, 1000, 1024, 4096, 12288):
+                bq, bkv = default_config(sq, skv)
+                validate_blocks(sq, skv, bq, bkv)   # must not raise
+
+    def test_good_blocks_still_work(self):
+        from repro.kernels.flash_attention import (
+            flash_attention as raw_flash)
+        q, k, v = self._qkv()
+        out = raw_flash(q, k, v, block_q=128, block_kv=128)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
