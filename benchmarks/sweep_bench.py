@@ -1,30 +1,43 @@
-"""Compiled analytic sweep benchmark (DESIGN.md §8), pinning the two
+"""Compiled analytic sweep benchmark (DESIGN.md §8), pinning the
 properties of the compiled-plan tier in the perf trajectory:
 
 1. **Exactness** — compiled sweeps are bit-for-bit ``to_dict``-identical
    to the per-point symbolic path on the three paper stencils, at values
    spanning (and sitting exactly on) their layer-condition transition
    points.  Always asserted.
-2. **Speed** — a 1000-point *cold* ECM N-sweep through the compiled plan
-   is at least 20× faster than per-point symbolic evaluation
-   (``ecm.model`` per bound point, the pre-plan hot path).  The full run
-   times every symbolic point; ``--smoke`` times a sample and scales.  A
-   missed target is reported and marked, not fatal — wall-clock ratios
-   are load-dependent; pass ``--enforce`` to turn a miss into a failure.
+2. **Speed (1-D)** — a 1000-point *cold* ECM N-sweep through the compiled
+   plan is at least 20× faster than per-point symbolic evaluation
+   (``ecm.model`` per bound point, the pre-plan hot path).
+3. **Speed (N-D)** — a *cold* 100×100 (N × cores) ECM grid through the
+   batched plan is at least 20× faster than the per-point path, with the
+   chip-level saturation outputs (``saturation_cores``,
+   ``performance_at_cores = min(single·n, sat)``) coming out of the same
+   batched call and matching the per-point derivations exactly (always
+   asserted; ECM regime cells broadcast across the whole cores axis).
+
+A missed speed target is reported and marked, not fatal — wall-clock
+ratios are load-dependent; pass ``--enforce`` to turn a miss into a
+failure.  Results are also written as JSON
+(``benchmarks/out/sweep_bench.json``) for the CI artifact trail.
 
     PYTHONPATH=src python -m benchmarks.sweep_bench [--smoke] [--enforce]
 """
+import json
 import math
 import pathlib
 import time
 
 from repro.core import (AnalysisSession, ecm, layer_conditions, load_machine,
                         parse_kernel)
+from repro.core.compiled import meshgrid_points
 
 STENCILS = pathlib.Path(__file__).resolve().parent.parent / \
     "src" / "repro" / "configs" / "stencils"
+OUT_JSON = pathlib.Path(__file__).resolve().parent / "out" / \
+    "sweep_bench.json"
 
 SPEEDUP_TARGET = 20.0      # cold 1000-point ECM N-sweep, compiled vs symbolic
+GRID_TARGET = 20.0         # cold 100x100 (N x cores) grid, compiled vs symbolic
 
 IDENTITY_CASES = [
     ("stencil_2d5pt.c", {"M": 200, "N": 400}, ["ecm"]),
@@ -70,9 +83,20 @@ def _check_identity(ivy) -> list[str]:
     return lines
 
 
+def _mark(speed: float, target: float, failures: list[str],
+          label: str) -> str:
+    if speed >= target:
+        return f"  (>= {target:.0f}x target met)"
+    failures.append(f"{label} speedup {speed:.1f}x below the "
+                    f"{target:.0f}x target")
+    return (f"  (!! below the {target:.0f}x target — timing-dependent; "
+            "rerun on an idle machine or pass --enforce to fail)")
+
+
 def run(smoke: bool = False, enforce: bool = False) -> str:
     ivy = load_machine("IVY")
     lines = _check_identity(ivy)
+    failures: list[str] = []
 
     # ---- speed: cold 1000-point ECM N-sweep -----------------------------
     k = parse_kernel((STENCILS / "stencil_3d7pt.c").read_text(),
@@ -98,20 +122,86 @@ def run(smoke: bool = False, enforce: bool = False) -> str:
                  f"{t_symbolic * 1e3:9.0f} ms{basis}")
     lines.append(f"  compiled plan, cold (one batch) : "
                  f"{t_compiled * 1e3:9.1f} ms")
-    mark = ""
-    if not smoke or enforce:
-        if speed >= SPEEDUP_TARGET:
-            mark = f"  (>= {SPEEDUP_TARGET:.0f}x target met)"
-        elif enforce:
-            raise AssertionError(
-                f"compiled sweep speedup {speed:.1f}x below the "
-                f"{SPEEDUP_TARGET:.0f}x target")
-        else:
-            mark = (f"  (!! below the {SPEEDUP_TARGET:.0f}x target — "
-                    "timing-dependent; rerun on an idle machine or pass "
-                    "--enforce to fail)")
+    mark = "" if smoke and not enforce \
+        else _mark(speed, SPEEDUP_TARGET, failures, "1-D compiled sweep")
     lines.append(f"  speedup                         : {speed:9.0f}x{mark}")
     lines.append(f"  session stats: {sess.stats}")
+
+    # ---- speed: cold 100x100 (N x cores) ECM grid -----------------------
+    # the batched cores axis: ECM results are cores-invariant given the
+    # LC traffic, so regime cells broadcast across the whole cores axis
+    # and the saturation closed forms (n_sat, min(single*n, sat)) come
+    # out of the same batched evaluation
+    n_vals = list(range(50, 1050, 10))               # 100 sizes
+    cores_axis = list(range(1, 101))                 # 100 core counts
+    npts = len(n_vals) * len(cores_axis)
+    grid_pts = [(n, c) for n in n_vals for c in cores_axis]
+    gsample = grid_pts[::101] if smoke else grid_pts
+
+    t0 = time.perf_counter()
+    for n, c in gsample:
+        r = ecm.model(k.bind(N=n), ivy, predictor="LC", cores=c)
+        r.performance_flops(c)
+        r.saturation_cores
+    t_grid_sym = (time.perf_counter() - t0) * npts / len(gsample)
+
+    gsess = AnalysisSession(ivy)
+    t0 = time.perf_counter()
+    comp = gsess.sweep(k, {"N": n_vals}, models=["ecm"], cores=cores_axis,
+                       compiled=True)["ecm"]
+    t_grid_comp = time.perf_counter() - t0
+    gspeed = t_grid_sym / t_grid_comp if t_grid_comp > 0 else float("inf")
+
+    # exactness: to_dict-identical per point, and the plan's batched
+    # saturation arrays equal the per-point ECMResult derivations
+    plan = gsess.sweep_plan(k, ("N",))
+    coords, cores_arr, _shape = meshgrid_points({"N": n_vals},
+                                                cores=cores_axis)
+    terms = plan.ecm_terms(coords, cores=cores_arr)
+    check = list(range(0, npts, 101)) if smoke else list(range(npts))
+    for i in check:
+        n, c = grid_pts[i]
+        ref = ecm.model(k.bind(N=n), ivy, predictor="LC", cores=c)
+        assert comp[i].to_dict() == ref.to_dict(), \
+            f"N-D compiled ECM diverges from per-point at N={n}, cores={c}"
+        assert float(terms["performance_at_cores"][i]) \
+            == ref.performance_flops(c), \
+            f"batched performance_at_cores diverges at N={n}, cores={c}"
+        assert int(terms["n_sat"][i]) == ref.saturation_cores, \
+            f"batched n_sat diverges at N={n}, cores={c}"
+
+    lines.append("")
+    lines.append(f"cold {len(n_vals)}x{len(cores_axis)} (N x cores) ECM "
+                 f"grid ({npts} points, 3d-7pt, IVY, LC):")
+    gbasis = (f" (sampled {len(gsample)} points, scaled)" if smoke else "")
+    lines.append(f"  per-point symbolic + saturation : "
+                 f"{t_grid_sym * 1e3:9.0f} ms{gbasis}")
+    lines.append(f"  compiled N-D plan, cold         : "
+                 f"{t_grid_comp * 1e3:9.1f} ms")
+    gmark = "" if smoke and not enforce \
+        else _mark(gspeed, GRID_TARGET, failures, "2-D (N x cores) grid")
+    lines.append(f"  speedup                         : {gspeed:9.0f}x{gmark}")
+    lines.append(f"  saturation outputs identical on {len(check)} checked "
+                 "points (to_dict, performance_at_cores, n_sat)")
+    lines.append(f"  session stats: {gsess.stats}")
+
+    OUT_JSON.parent.mkdir(parents=True, exist_ok=True)
+    OUT_JSON.write_text(json.dumps(
+        {"smoke": smoke,
+         "sweep_1d": {"points": len(values), "target": SPEEDUP_TARGET,
+                      "symbolic_ms": t_symbolic * 1e3,
+                      "compiled_ms": t_compiled * 1e3, "speedup": speed},
+         "grid_nd": {"points": npts, "shape": [len(n_vals),
+                                               len(cores_axis)],
+                     "target": GRID_TARGET,
+                     "symbolic_ms": t_grid_sym * 1e3,
+                     "compiled_ms": t_grid_comp * 1e3, "speedup": gspeed,
+                     "checked_points": len(check)},
+         "targets_met": not failures}, indent=2, sort_keys=True))
+    lines.append("")
+    lines.append(f"wrote {OUT_JSON.relative_to(OUT_JSON.parents[2])}")
+    if enforce and failures:
+        raise AssertionError("; ".join(failures))
     return "\n".join(lines)
 
 
@@ -120,7 +210,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--enforce", action="store_true",
-                    help="fail (non-zero exit) if the speedup target is "
+                    help="fail (non-zero exit) if a speedup target is "
                          "missed instead of just reporting it")
     args = ap.parse_args()
     print(run(smoke=args.smoke, enforce=args.enforce))

@@ -32,6 +32,7 @@ instead of the text reports — both routed through
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
 import math
 import pathlib
@@ -126,9 +127,17 @@ def build_parser() -> argparse.ArgumentParser:
                     default=None, metavar="MODEL")
     sp.add_argument("--param", default="N",
                     help="symbol to sweep (default N)")
-    sp.add_argument("--range", nargs=3, type=int, required=True,
+    sp.add_argument("--range", action="append", nargs="+", required=True,
+                    metavar="ARG",
+                    help="sweep axis: START STOP STEP (inclusive STOP, over "
+                         "--param) or SYMBOL START STOP STEP; repeat the "
+                         "flag for an N-dimensional grid (axes in flag "
+                         "order, results flattened in C order)")
+    sp.add_argument("--cores-range", nargs=3, type=int, default=None,
                     metavar=("START", "STOP", "STEP"),
-                    help="sweep values START..STOP inclusive, stepping STEP")
+                    help="batched cores axis (innermost grid axis): every "
+                         "point is evaluated at its own core count through "
+                         "the chip-level ECM saturation closed form")
     sp.add_argument("--dense", action="store_true",
                     help="require the compiled analytic sweep plan: the "
                          "grid is batched through vectorized LC/ECM closed "
@@ -159,7 +168,13 @@ def build_parser() -> argparse.ArgumentParser:
     sp.add_argument("--grid2", nargs=4, default=None,
                     metavar=("SYMBOL", "START", "STOP", "STEP"),
                     help="second grid dimension for a 2D blocking search "
-                         "(outer symbol bound per row, inner batched)")
+                         "(outer symbol first, whole grid batched)")
+    sp.add_argument("--cores-range", nargs=3, type=int, default=None,
+                    metavar=("START", "STOP", "STEP"),
+                    help="cores axis for --grid: rank the saturated "
+                         "performance min(single*n, sat) over the "
+                         "(block x cores) grid and report n_sat per "
+                         "candidate plus the saturation sweet spot")
 
     sp = sub.add_parser("lint",
                         help="static diagnostics: check kernel, machine, "
@@ -421,38 +436,106 @@ def cmd_analyze(args) -> int:
     return 0
 
 
+def _sweep_axes(args) -> dict[str, list[int]]:
+    """Parse repeated ``--range`` specs into an ordered ``{symbol:
+    values}`` grid: a 3-int spec sweeps ``--param``, a 4-element one
+    names its own symbol (flag order = axis order)."""
+    axes: dict[str, list[int]] = {}
+    for spec in args.range:
+        if len(spec) == 4 and not str(spec[0]).lstrip("-").isdigit():
+            sym, nums = str(spec[0]), spec[1:]
+            if not sym.isidentifier():
+                raise ValueError(
+                    f"--range symbol {sym!r} is not a valid identifier")
+        elif len(spec) == 3:
+            sym, nums = str(args.param), spec
+        else:
+            raise ValueError(
+                "--range takes START STOP STEP (over --param) or "
+                f"SYMBOL START STOP STEP, got {spec!r}")
+        try:
+            start, stop, step = (int(x) for x in nums)
+        except ValueError:
+            raise ValueError(
+                f"--range expects integer START STOP STEP, got {spec!r}")
+        if sym in axes:
+            raise ValueError(f"duplicate --range axis {sym!r}")
+        axes[sym] = list(range(start, stop + 1, step))    # STOP inclusive
+    return axes
+
+
 def cmd_sweep(args) -> int:
     machine, kernel = _load(args)
+    axes = _sweep_axes(args)
+    cores_axis = None
+    if args.cores_range is not None:
+        cs, ce, cstep = args.cores_range
+        cores_axis = list(range(cs, ce + 1, cstep))       # STOP inclusive
     _preflight(args, machine, kernel, models=_models(args),
-               compiled=True if args.dense else None)
+               compiled=True if args.dense else None,
+               sweep_params=list(axes),
+               cores_axis=cores_axis is not None)
     service = _service(args)
-    start, stop, step = args.range
-    values = list(range(start, stop + 1, step))     # STOP inclusive
     models = _models(args)
-    out = api.sweep(kernel, machine, args.param, values, models=models,
-                    predictor=args.cache_predictor, cores=args.cores,
+    nd = len(axes) > 1 or cores_axis is not None
+    if nd:
+        param, values = dict(axes), None
+    else:
+        # single axis, scalar cores: the historical 1-D call, so service
+        # cache keys stay byte-identical to pre-N-D runs
+        param = next(iter(axes))
+        values = axes[param]
+    out = api.sweep(kernel, machine, param, values, models=models,
+                    predictor=args.cache_predictor,
+                    cores=cores_axis if cores_axis is not None
+                    else args.cores,
                     sim_kwargs=_sim_kwargs(args), incore=args.incore,
                     service=service, workers=args.workers,
                     compiled=True if args.dense else "auto")
     sess = None if service is not None else api.get_session(machine)
+    names = list(axes) + (["cores"] if cores_axis is not None else [])
+    dims = [axes[s] for s in axes]
+    if cores_axis is not None:
+        dims.append(cores_axis)
+    points = list(itertools.product(*dims))   # C order: cores innermost
     if args.json:
-        payload = {m: [r.to_dict() for r in rs] for m, rs in out.items()}
+        payload = {}
+        for m, rs in out.items():
+            rows = []
+            for pt, r in zip(points, rs):
+                d = r.to_dict()
+                if cores_axis is not None and hasattr(r, "scaling_curve"):
+                    # per-point saturation outputs (analyze --cores emits
+                    # the same keys); only under a cores axis so 1-D
+                    # payloads keep their exact from_dict round-trip
+                    d["cores"] = pt[-1]
+                    d["performance_at_cores"] = r.performance_flops(pt[-1])
+                rows.append(d)
+            payload[m] = rows
         if args.stats:
             payload = {"results": payload,
                        "stats": _stats_payload(service, sess)}
         print(json.dumps(payload, indent=2, sort_keys=True))
         return 0
-    print(f"{args.param:>6} | " + " | ".join(f"{m:>18}" for m in models)
-          + "   (cy/CL for ecm, GFLOP/s for roofline)")
-    for idx, v in enumerate(values):
+    legend = ("(GFLOP/s at the point's core count)"
+              if cores_axis is not None
+              else "(cy/CL for ecm, GFLOP/s for roofline)")
+    print(" | ".join(f"{n:>6}" for n in names) + " | "
+          + " | ".join(f"{m:>18}" for m in models) + "   " + legend)
+    for idx, pt in enumerate(points):
         cells = []
         for m in models:
             r = out[m][idx]
             if hasattr(r, "t_ecm"):
-                cells.append(f"{r.t_ecm:>15.1f} cy")
+                if cores_axis is not None:
+                    cells.append(
+                        f"{r.performance_flops(pt[-1]) / 1e9:>12.2f} GF/s")
+                else:
+                    cells.append(f"{r.t_ecm:>15.1f} cy")
             else:
                 cells.append(f"{r.performance / 1e9:>12.2f} GF/s")
-        print(f"{v:>6} | " + " | ".join(f"{c:>18}" for c in cells))
+        print(" | ".join(f"{v:>6}" for v in pt) + " | "
+              + " | ".join(f"{c:>18}" for c in cells))
     if args.stats:
         print()
         _print_stats(_stats_payload(service, sess))
@@ -580,12 +663,16 @@ def _cmd_blocking_grid(args, machine, kernel) -> int:
     specs = [(args.symbol, range(start, stop + 1, step))]
     if args.grid2 is not None:
         sym2, s2, e2, st2 = args.grid2
-        # outer dimension first: the inner one is batched per row
+        # outer dimension first (C-order flattening in the batched plan)
         specs = [(sym2, range(int(s2), int(e2) + 1, int(st2)))] + specs
+    cores = args.cores
+    if args.cores_range is not None:
+        cs, ce, cstep = args.cores_range
+        cores = list(range(cs, ce + 1, cstep))    # STOP inclusive
     gs = blocking.grid_search(kernel, machine, specs,
                               model=args.performance_model,
                               predictor=args.cache_predictor,
-                              cores=args.cores, incore=args.incore)
+                              cores=cores, incore=args.incore)
     if args.json:
         print(json.dumps(gs.to_dict(), indent=2, sort_keys=True))
         return 0
@@ -594,24 +681,47 @@ def _cmd_blocking_grid(args, machine, kernel) -> int:
         pts *= len(g)
     grid_desc = " x ".join(f"{s}[{g[0]}..{g[-1]}]"
                            for s, g in zip(gs.symbols, gs.grids))
+    if gs.cores_grid:
+        pts *= len(gs.cores_grid)
+        grid_desc += f" x cores[{gs.cores_grid[0]}..{gs.cores_grid[-1]}]"
     print(f"dense blocking grid search for "
           f"{getattr(kernel, 'name', args.kernel)} "
           f"({gs.model}, {pts} points over {grid_desc}):")
-    unit = ("GFLOP/s" if gs.metric == "flops" else "cy/unit")
-    scale = 1e-9 if gs.metric == "flops" else 1.0
+    maximize = gs.metric in ("flops", "flops_at_cores")
+    unit = "GFLOP/s" if maximize else "cy/unit"
+    scale = 1e-9 if maximize else 1.0
     best = " ".join(f"{s} = {v}" for s, v in gs.best.items())
+    if gs.cores_grid:
+        best += f" cores = {gs.best_cores}"
     print(f"  best: {best}  ->  {gs.best_score * scale:.1f} {unit}")
     if hasattr(gs.best_result, "notation"):
         print(f"  {gs.best_result.notation()}")
+    if gs.cores_grid:
+        print("  best block per core count (saturated GFLOP/s, n_sat):")
+        for e in gs.best_per_cores:
+            blk = " ".join(f"{s} = {v}" for s, v in e["best"].items())
+            print(f"    n = {e['cores']:>3}: {blk}  ->  "
+                  f"{e['score'] * 1e-9:.1f} GFLOP/s  (n_sat {e['n_sat']})")
+        ss = gs.sweet_spot
+        print(f"  sweet spot: {ss['cores']} cores saturate the best block "
+              f"(n_sat {ss['n_sat']}) at {ss['score'] * 1e-9:.1f} GFLOP/s")
     return 0
 
 
 def cmd_blocking(args) -> int:
     machine, kernel = _load(args)
+    grid_syms = ([args.grid2[0]] if args.grid2 is not None else []) \
+        + [args.symbol]
     _preflight(args, machine, kernel, models=[args.performance_model],
-               operation="blocking")
+               operation="blocking",
+               compiled=True if args.grid is not None else None,
+               sweep_params=grid_syms if args.grid is not None else None,
+               cores_axis=args.cores_range is not None)
     if args.grid2 is not None and args.grid is None:
         raise ValueError("--grid2 needs --grid for the first dimension")
+    if args.cores_range is not None and args.grid is None:
+        raise ValueError("--cores-range needs --grid (the cores axis "
+                         "extends the dense blocking grid)")
     if args.grid is not None:
         return _cmd_blocking_grid(args, machine, kernel)
     rows = []

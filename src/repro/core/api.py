@@ -172,10 +172,10 @@ def analyze(source: Any, machine: Machine | str, model: str = "ecm",
     return res
 
 
-def sweep(source: Any, machine: Machine | str, param: str, values,
+def sweep(source: Any, machine: Machine | str, param, values=None,
           models=("ecm",), predictor: str = "LC", *,
           frontend: str | None = None, name: str | None = None,
-          constants: dict | None = None, cores: int = 1,
+          constants: dict | None = None, cores=1,
           sim_kwargs: dict | None = None, incore: str = "simple",
           lint: str = "off",
           session: AnalysisSession | None = None,
@@ -183,9 +183,16 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
           frontend_opts: dict | None = None,
           compiled: bool | str = "auto",
           **opts) -> dict[str, list[Result]]:
-    """Frontend-aware batch API: load once, evaluate ``models`` at every
-    ``param`` value through the memoizing session (see
+    """Frontend-aware batch API: load once, evaluate ``models`` over a
+    parameter grid through the memoizing session (see
     :meth:`AnalysisSession.sweep`).
+
+    ``param`` is one symbol name (``values`` = its value list) or a
+    ``{symbol: values}`` mapping describing an N-dimensional grid (the
+    CLI's repeated ``--range``); ``cores`` is a core count or a sequence,
+    which adds a batched cores axis (innermost) so every grid point is
+    evaluated at its own core count.  Results come back flattened in C
+    order (axes in ``param`` order, cores last).
 
     ``compiled`` selects the sweep engine: ``"auto"`` (default) batches
     eligible sweeps through the compiled analytic plan
@@ -212,7 +219,11 @@ def sweep(source: Any, machine: Machine | str, param: str, values,
                                  frontend_opts)
     report = _lint_gate(kernel, mach, lint, models=list(models),
                         predictor=predictor, incore=incore,
-                        compiled=compiled)
+                        compiled=compiled,
+                        sweep_params=(list(param) if isinstance(param, dict)
+                                      else [str(param)]),
+                        cores_axis=AnalysisSession._cores_axis(cores)
+                        is not None)
     if workers and workers > 1:
         from repro.service.workers import sweep_sharded
         out = sweep_sharded(kernel, mach, param, values, models=models,

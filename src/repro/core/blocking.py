@@ -11,13 +11,14 @@ possible. Every Pallas kernel in :mod:`repro.kernels` sizes its blocks here.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 
 import numpy as np
 import sympy
 
 from . import layer_conditions
-from .compiled import CompileError
+from .compiled import CompileError, meshgrid_points
 from .kernel_ir import LoopKernel
 from .machine import Machine
 from .model_api import resolve_model
@@ -112,9 +113,20 @@ class GridSearchResult:
     resolved exactly like ``best`` (largest tied point wins) — the
     autotuner (:mod:`repro.tune`) consumes this to pick its measurement
     shortlist, so ``ranking[0]`` always equals ``(best, best_score)``.
+
+    A search with a **cores axis** (``grid_search(..., cores=[...])``)
+    appends that axis (innermost) to ``scores``, maximizes saturated
+    performance ``min(single·n, sat)`` per point, and fills the
+    multicore fields: ``cores_grid`` (the axis), ``best_cores`` (core
+    count of the winning point), ``n_sat`` (the batched saturation-point
+    array over the full grid), ``best_per_cores`` (the winning block per
+    core count), and ``sweet_spot`` (the fewest cores at which the
+    winning block already hits its peak score — the saturation knee n_sat
+    clipped to the grid).  All default empty so 1-D/2-D payloads stay
+    byte-identical to before.
     """
     model: str
-    metric: str            # 'cy_per_unit' (min) | 'flops' (max) | 'custom'
+    metric: str   # 'cy_per_unit' (min) | 'flops'/'flops_at_cores' (max)
     symbols: tuple[str, ...]
     grids: tuple[tuple[int, ...], ...]
     scores: np.ndarray
@@ -122,15 +134,29 @@ class GridSearchResult:
     best_score: float
     best_result: object
     ranking: tuple = ()    # ((params, score), ...) best-first
+    cores_grid: tuple = ()
+    best_cores: int | None = None
+    n_sat: object = None   # np.ndarray over the grid, or None
+    best_per_cores: tuple = ()   # ({cores, best, score, n_sat}, ...)
+    sweet_spot: dict | None = None
 
     def to_dict(self) -> dict:
-        return {"model": self.model, "metric": self.metric,
-                "symbols": list(self.symbols),
-                "grids": [list(g) for g in self.grids],
-                "scores": self.scores.tolist(),
-                "best": dict(self.best), "best_score": self.best_score,
-                "best_result": self.best_result.to_dict(),
-                "ranking": [[dict(p), s] for p, s in self.ranking]}
+        out = {"model": self.model, "metric": self.metric,
+               "symbols": list(self.symbols),
+               "grids": [list(g) for g in self.grids],
+               "scores": self.scores.tolist(),
+               "best": dict(self.best), "best_score": self.best_score,
+               "best_result": self.best_result.to_dict(),
+               "ranking": [[dict(p), s] for p, s in self.ranking]}
+        if self.cores_grid:
+            out["cores_grid"] = list(self.cores_grid)
+            out["best_cores"] = self.best_cores
+            out["n_sat"] = (self.n_sat.tolist()
+                            if self.n_sat is not None else None)
+            out["best_per_cores"] = [dict(e) for e in self.best_per_cores]
+            out["sweet_spot"] = (dict(self.sweet_spot)
+                                 if self.sweet_spot else None)
+        return out
 
 
 def _resolve_metric(model: str, metric) -> tuple[str, str]:
@@ -159,55 +185,90 @@ def _resolve_metric(model: str, metric) -> tuple[str, str]:
     return kind, score_model
 
 
-def _metric_1d(sess: AnalysisSession, kernel: LoopKernel, symbol: str,
-               vals: list[int], model: str, predictor: str, cores: int,
-               opts: dict, metric=None) -> np.ndarray:
-    """Vectorized metric over one symbol via the compiled plan; values whose
-    ordering the plan cannot batch are scored through the exact path."""
-    plan = sess.sweep_plan(kernel, symbol, cores, opts.get("incore"))
-    arr = np.asarray(vals, dtype=np.float64)
-    kind, score_model = _resolve_metric(model, metric)
+def _metric_grid(sess: AnalysisSession, kernel: LoopKernel, specs,
+                 predictor: str, cores, cores_axis, opts: dict,
+                 metric, kind: str, score_model: str):
+    """Vectorized metric over the whole (specs × cores) grid through ONE
+    compiled N-D plan; points whose ordering the plan cannot batch are
+    scored through the exact path.  Returns ``(scores, n_sat)`` shaped
+    ``(*len(grid axes)[, len(cores_axis)])`` — ``n_sat`` is ``None``
+    unless a cores axis is present."""
+    syms = tuple(s for s, _ in specs)
+    axes = {s: vs for s, vs in specs}
+    if len(syms) == 1 and cores_axis is None:
+        # keep the historical plan-cache key so 1-D searches share plans
+        # with equally-shaped AnalysisSession.sweep calls
+        plan = sess.sweep_plan(kernel, syms[0], cores, opts.get("incore"))
+    else:
+        plan = sess.sweep_plan(kernel, syms, None, opts.get("incore"))
+    coords, cores_arr, shape = meshgrid_points(
+        axes, cores=cores_axis if cores_axis is not None else int(cores))
+    npts = coords[syms[0]].size
+    n_sat = None
     if kind == "roofline":
         variant = getattr(resolve_model(score_model), "variant", "IACA")
-        terms = plan.roofline_terms(arr, variant=variant)
-        scores, valid = np.asarray(terms["performance"], dtype=np.float64), \
-            terms["valid"]
+        terms = plan.roofline_terms(coords, variant=variant,
+                                    cores=cores_arr)
+        scores = np.asarray(terms["performance"], dtype=np.float64)
     else:
-        terms = plan.ecm_terms(arr)
+        terms = plan.ecm_terms(coords, cores=cores_arr)
         if kind == "custom":
             scores = np.asarray(metric(terms), dtype=np.float64)
-            if scores.shape != arr.shape:
+            if scores.shape != (npts,):
                 raise ValueError(
                     "callable grid_search metric must map the compiled "
                     f"term arrays to one score per point; got shape "
-                    f"{scores.shape} for {arr.shape[0]} points")
+                    f"{scores.shape} for {npts} points")
+        elif cores_axis is not None:
+            scores = np.asarray(terms["performance_at_cores"],
+                                dtype=np.float64)
+            n_sat = terms["n_sat"].copy()
         else:
             scores = np.asarray(terms["t_ecm"], dtype=np.float64)
-        valid = terms["valid"]
+    valid = terms["valid"]
     scores = scores.copy()
     for i in np.flatnonzero(~valid):
-        res = sess.analyze(kernel.bind(**{symbol: vals[i]}), score_model,
-                           predictor=predictor, cores=cores, **opts)
+        binding = {s: int(coords[s][i]) for s in syms}
+        c_i = int(cores_arr[i]) if np.ndim(cores_arr) else int(cores_arr)
+        res = sess.analyze(kernel.bind(**binding), score_model,
+                           predictor=predictor, cores=c_i, **opts)
         # custom metrics only see compiled term arrays; points outside the
         # plan's validity fall back to the exact t_ecm, like 'ecm'
-        scores[i] = res.performance if kind == "roofline" else res.t_ecm
-    return scores
+        if kind == "roofline":
+            scores[i] = res.performance
+        elif cores_axis is not None:
+            scores[i] = res.performance_flops(c_i)
+            n_sat[i] = res.saturation_cores
+        else:
+            scores[i] = res.t_ecm
+    return (scores.reshape(shape),
+            n_sat.reshape(shape) if n_sat is not None else None)
 
 
 def grid_search(kernel: LoopKernel, machine: Machine, specs,
-                model: str = "ecm", predictor: str = "LC", cores: int = 1,
+                model: str = "ecm", predictor: str = "LC", cores=1,
                 session: AnalysisSession | None = None, metric=None,
                 **opts) -> GridSearchResult:
     """Ab-initio blocking-factor search over a dense 1D/2D parameter grid.
 
     ``specs`` is one or two ``(symbol, values)`` pairs, e.g.
     ``[("N", range(64, 1025, 8))]`` or 2D ``[("M", ...), ("N", ...)]``.
-    Every grid point is scored through the compiled plan's vectorized
-    closed forms (ECM cycles per unit, or Roofline flop/s); for 2D grids
-    the outer symbol is bound per row and the inner symbol batched, so the
-    cost is ``O(rows × regimes)`` symbolic evaluations instead of
-    ``O(rows × cols)``.  The winning point is re-evaluated through the
-    exact symbolic path and returned as ``best_result``.
+    The whole grid is scored through ONE compiled N-D plan's vectorized
+    closed forms (ECM cycles per unit, or Roofline flop/s): points are
+    grouped by LC regime cell, so the cost is ``O(regime cells)``
+    symbolic evaluations instead of ``O(grid points)``.  The winning
+    point is re-evaluated through the exact symbolic path and returned
+    as ``best_result``.
+
+    ``cores`` is either a scalar (the historical behavior: every point
+    scored at that core count) or a sequence — a third, innermost grid
+    axis.  A cores axis ranks the chip-level ECM saturation closed form
+    ``min(single·n, sat)`` (maximized; metric ``'flops_at_cores'``) and
+    fills the multicore report fields: the batched ``n_sat`` array per
+    candidate, ``best_per_cores``, and the n_sat-aware ``sweet_spot``
+    (the fewest cores at which the winning block already saturates).
+    Saturation is an ECM concept, so a cores axis rejects Roofline and
+    custom metrics.
 
     ``metric`` decouples the score from ``model``: ``"ecm"`` minimizes
     t_ecm, ``"roofline"`` maximizes flop/s, and a callable receives the
@@ -246,9 +307,21 @@ def grid_search(kernel: LoopKernel, machine: Machine, specs,
         raise ValueError(
             f"session is bound to machine {session.machine.name!r}, "
             f"but grid_search was given {machine.name!r}")
-    sess = session or AnalysisSession(machine, cores=cores)
-    kind, _ = _resolve_metric(model, metric)
-    maximize = kind == "roofline"
+    kind, score_model = _resolve_metric(model, metric)
+    cores_axis = AnalysisSession._cores_axis(cores)
+    if cores_axis is not None:
+        if not cores_axis:
+            raise ValueError("empty cores axis")
+        if any(c < 1 for c in cores_axis):
+            raise ValueError(f"core counts must be >= 1, got {cores_axis!r}")
+        if kind != "ecm":
+            raise ValueError(
+                "a cores axis ranks the chip-level ECM saturation closed "
+                "form min(single*n, sat); Roofline and custom metrics "
+                f"have no saturation model (got metric kind {kind!r})")
+    sess = session or AnalysisSession(
+        machine, cores=1 if cores_axis is not None else cores)
+    maximize = kind == "roofline" or cores_axis is not None
 
     # LC metrics are piecewise-constant, so whole regimes tie; prefer the
     # *largest* tied grid point — bigger blocks amortize the halo and loop
@@ -257,24 +330,21 @@ def grid_search(kernel: LoopKernel, machine: Machine, specs,
         target = scores.max() if maximize else scores.min()
         return int(np.flatnonzero(scores.ravel() == target).max())
 
-    if len(specs) == 1:
-        sym, vals = specs[0]
-        scores = _metric_1d(sess, kernel, sym, vals, model, predictor,
-                            cores, opts, metric)
-        idx = _best_flat(scores)
-        best = {sym: vals[idx]}
-        params = [{sym: v} for v in vals]
-    else:
-        (sym0, vals0), (sym1, vals1) = specs
-        scores = np.empty((len(vals0), len(vals1)))
-        for i, v0 in enumerate(vals0):
-            row_kernel = kernel.bind(**{sym0: v0})
-            scores[i] = _metric_1d(sess, row_kernel, sym1, vals1, model,
-                                   predictor, cores, opts, metric)
-        i, j = divmod(_best_flat(scores), len(vals1))
-        best = {sym0: vals0[i], sym1: vals1[j]}
-        idx = (i, j)
-        params = [{sym0: v0, sym1: v1} for v0 in vals0 for v1 in vals1]
+    scores, n_sat = _metric_grid(sess, kernel, specs, predictor, cores,
+                                 cores_axis, opts, metric, kind,
+                                 score_model)
+    idx = np.unravel_index(_best_flat(scores), scores.shape)
+    best = {sym: vs[i] for (sym, vs), i in zip(specs, idx)}
+    best_cores = cores_axis[idx[-1]] if cores_axis is not None else None
+    dims = [vs for _, vs in specs]
+    if cores_axis is not None:
+        dims.append(cores_axis)
+    params = []
+    for combo in itertools.product(*dims):
+        p = {sym: v for (sym, _), v in zip(specs, combo)}
+        if cores_axis is not None:
+            p["cores"] = combo[-1]
+        params.append(p)
     # full ranking, best-first; within a tied score the larger flat index
     # wins, matching _best_flat — so ranking[0] == (best, best_score)
     flat = scores.ravel()
@@ -282,16 +352,45 @@ def grid_search(kernel: LoopKernel, machine: Machine, specs,
     order = np.lexsort((-np.arange(flat.size), sign * flat))
     ranking = tuple((params[int(k)], float(flat[int(k)])) for k in order)
     best_score = float(scores[idx])
-    best_result = sess.analyze(kernel.bind(**best), model,
-                               predictor=predictor, cores=cores, **opts)
+    best_result = sess.analyze(
+        kernel.bind(**best), model, predictor=predictor,
+        cores=best_cores if cores_axis is not None else cores, **opts)
+    best_per_cores: tuple = ()
+    sweet_spot = None
+    if cores_axis is not None:
+        bpc = []
+        for ci, c in enumerate(cores_axis):
+            sub = scores[..., ci]
+            k = np.unravel_index(
+                int(np.flatnonzero(sub.ravel() == sub.max()).max()),
+                sub.shape)
+            entry = {"cores": int(c),
+                     "best": {sym: vs[i]
+                              for (sym, vs), i in zip(specs, k)},
+                     "score": float(sub[k]),
+                     "n_sat": int(n_sat[k + (ci,)])}
+            bpc.append(entry)
+        best_per_cores = tuple(bpc)
+        # the winning block saturates at its n_sat: the fewest cores on
+        # the grid that already reach the block's peak score
+        row = scores[idx[:-1]]
+        peak = float(row.max())
+        ci = int(np.flatnonzero(row == peak).min())
+        sweet_spot = {"best": dict(best), "cores": int(cores_axis[ci]),
+                      "score": peak,
+                      "n_sat": int(n_sat[idx[:-1] + (ci,)])}
     return GridSearchResult(
         model=resolve_model(model).name,
         metric=("custom" if kind == "custom"
+                else "flops_at_cores" if cores_axis is not None
                 else "flops" if maximize else "cy_per_unit"),
         symbols=tuple(s for s, _ in specs),
         grids=tuple(tuple(vs) for _, vs in specs),
         scores=scores, best=best, best_score=best_score,
-        best_result=best_result, ranking=ranking)
+        best_result=best_result, ranking=ranking,
+        cores_grid=tuple(cores_axis) if cores_axis is not None else (),
+        best_cores=best_cores, n_sat=n_sat,
+        best_per_cores=best_per_cores, sweet_spot=sweet_spot)
 
 
 def _round_down(v: int, granule: int) -> int:

@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 from . import incore as _incore
 from .incore import InCoreResult
 from .kernel_ir import LoopKernel
@@ -104,7 +106,23 @@ class ECMResult:
         return min(single * cores, sat)
 
     def scaling_curve(self, max_cores: int) -> list[float]:
-        return [self.performance_flops(n) for n in range(1, max_cores + 1)]
+        """``performance_flops`` at 1..max_cores in one vectorized pass.
+
+        The saturation inputs (``t_ecm``, ``t_mem`` — each a walk over
+        the contribution lists) are computed once instead of once per
+        core count; output parity with the per-cores loop is pinned by
+        tests."""
+        n = int(max_cores)
+        if n <= 0:
+            return []
+        if self.flops_per_unit == 0 or self.t_ecm == 0:
+            return [0.0] * n
+        single = self.flops_per_unit / self.t_ecm * self.clock_hz
+        sat = (self.flops_per_unit / self.t_mem * self.clock_hz
+               if self.t_mem > 0 else math.inf)
+        curve = np.minimum(single * np.arange(1, n + 1, dtype=np.float64),
+                           sat)
+        return [float(x) for x in curve]
 
     # --- machine-readable output (DESIGN.md §4) -----------------------
     def to_dict(self) -> dict:

@@ -157,6 +157,55 @@ class CompiledPredictor(LintRule):
 
 
 @register_rule
+class NdSweepAxes(LintRule):
+    """X307 — an N-dimensional sweep grid (multiple ``--range`` symbols
+    and/or ``--cores-range``) under a predictor without analytic closed
+    forms.  The compiled engine batches such grids by LC regime cell;
+    the simulator has no closed form, so a ``--dense`` request is an
+    error (naming each axis) and an auto-routed one degrades to
+    per-point simulation over the full Cartesian product."""
+
+    code = "X307"
+    family = "cross"
+    title = "N-D sweep grid under a closed-form-free predictor"
+    needs = ()
+
+    def check(self, ctx: LintContext) -> Iterable[Diagnostic]:
+        axes = [str(s) for s in ctx.request.get("sweep_params") or []]
+        if ctx.request.get("cores_axis"):
+            axes.append("cores")
+        if len(axes) <= 1:
+            return
+        predictor = str(ctx.request.get("predictor", "LC")).upper()
+        try:
+            from ..predictors import resolve_predictor
+            p = resolve_predictor(predictor)
+        except ValueError:
+            return
+        if p.supports_compiled:
+            return
+        grid = " × ".join(axes)
+        if ctx.request.get("compiled") is True:
+            yield Diagnostic(
+                code=self.code, severity="error",
+                message=f"--dense over the ({grid}) grid needs analytic "
+                        f"closed forms on every axis; predictor "
+                        f"{predictor!r} has none",
+                suggestion="drop --dense (per-point sweep) or use "
+                           "--cache-predictor LC",
+                subject=grid)
+        else:
+            yield Diagnostic(
+                code=self.code, severity="warning",
+                message=f"the ({grid}) grid cannot batch under predictor "
+                        f"{predictor!r}; every grid point will run a "
+                        "full cache simulation",
+                suggestion="use --cache-predictor LC for batched "
+                           "regime-cell evaluation, or shrink the grid",
+                subject=grid)
+
+
+@register_rule
 class LoopOnlyOperation(LintRule):
     """X304 — operations defined only over the affine loop IR (blocking
     analysis, LC transition points) requested for a non-loop source."""

@@ -48,10 +48,19 @@ class PerformanceModel(abc.ABC):
     shortcuts ``volumes`` and ``incore_result``; concrete models forward
     them to their module-level ``model()`` functions, which remain usable
     directly.
+
+    ``cores_invariant_result`` declares that two calls differing only in
+    ``cores`` but with identical predicted traffic return identical
+    results — true for ECM, whose result only *derives* multicore scaling
+    (``performance_flops(cores)``/``saturation_cores`` are methods of the
+    core count), false for Roofline, which bakes the per-cores measured
+    bandwidth into the result.  The compiled N-D sweep uses it to
+    broadcast one regime representative across the whole cores axis.
     """
 
     name: str = "?"
     input_kind: str = "loop"
+    cores_invariant_result: bool = False
 
     @abc.abstractmethod
     def analyze(self, kernel, machine: Machine, **opts) -> Result:
@@ -71,6 +80,7 @@ class ECMModel(PerformanceModel):
     """Execution-Cache-Memory model (paper §1.2.2, §3.2)."""
 
     name = "ecm"
+    cores_invariant_result = True
 
     def analyze(self, kernel: LoopKernel, machine: Machine,
                 **opts) -> _ecm.ECMResult:

@@ -36,10 +36,15 @@ how they were constructed.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+from collections.abc import Mapping, Sequence
+
+import numpy as np
 
 from . import incore as _incore
 from .cachesim import normalize_sim_kwargs
-from .compiled import CompiledSweepPlan, CompileError, compile_plan
+from .compiled import (CompiledSweepPlan, CompileError, compile_plan,
+                       meshgrid_points)
 from .identity import freeze as _freeze
 from .identity import incore_key, kernel_key, source_key  # noqa: F401
 from .incore import InCoreResult
@@ -258,29 +263,50 @@ class AnalysisSession:
         self._results[key] = result
 
     # ------------------------------------------------------------------
-    def sweep_plan(self, kernel: LoopKernel, param: str,
+    def sweep_plan(self, kernel: LoopKernel, param,
                    cores: int | None = None,
                    incore: str | None = None) -> CompiledSweepPlan:
         """The compiled sweep plan for ``kernel``'s structure with ``param``
         unbound (lowered once, then cached alongside the other tiers).
-        The plan's in-core result comes through the session's memoized
-        tier — in-core is structure-only, so one analysis serves the
-        entire grid."""
-        cores = self.cores if cores is None else cores
+        ``param`` is one symbol or an ordered sequence of them (N-D
+        grids); N-D plans key without a core count — ``cores`` is a
+        runtime axis of every evaluation call, not part of the lowered
+        structure.  The plan's in-core result comes through the session's
+        memoized tier — in-core is structure-only, so one analysis serves
+        the entire grid."""
         incore = self.incore_model if incore is None else incore
+        symbols = ((str(param),) if isinstance(param, str)
+                   else tuple(str(s) for s in param))
         template = dataclasses.replace(
             kernel, constants={k: v for k, v in kernel.constants.items()
-                               if k != param})
-        key = (kernel_key(template), str(param), cores, incore.lower())
+                               if k not in symbols})
+        if isinstance(param, str):
+            cores = self.cores if cores is None else cores
+            key = (kernel_key(template), str(param), cores, incore.lower())
+        else:
+            cores = self.cores if cores is None else cores
+            key = (kernel_key(template), symbols, incore.lower())
         plan = self._plans.get(key)
         if plan is None:
-            plan = compile_plan(kernel, self.machine, param, cores=cores,
+            plan = compile_plan(kernel, self.machine,
+                                param if isinstance(param, str) else symbols,
+                                cores=cores,
                                 incore_result=self.incore(kernel, incore))
             self._plans[key] = plan
             self.stats.plan_compiles += 1
         return plan
 
-    def _compile_blocker(self, param, values, models, predictor) -> str | None:
+    @staticmethod
+    def _cores_axis(cores):
+        """A ``cores`` argument as an axis: the list of core counts when a
+        sequence was passed, else None (scalar core count, no axis)."""
+        if isinstance(cores, (Sequence, np.ndarray)) \
+                and not isinstance(cores, (str, bytes)):
+            return [int(c) for c in cores]
+        return None
+
+    def _compile_blocker(self, param, values, models, predictor,
+                         cores_axis=None) -> str | None:
         """Why this sweep cannot take the compiled path (None if it can)."""
         if not resolve_predictor(predictor).supports_compiled:
             return (f"predictor {predictor!r} has no analytic closed form "
@@ -288,48 +314,86 @@ class AnalysisSession:
         for m in models:
             if resolve_model(m).input_kind != "loop":
                 return f"model {str(m)!r} does not consume LoopKernel IR"
-        if not values:
+        params = param if isinstance(param, Mapping) else {param: values}
+        if not params:
             return "empty sweep"
-        for v in values:
-            try:
-                int(v)
-            except (TypeError, ValueError):
-                return f"non-integer sweep value {v!r}"
-        if not str(param).isidentifier():
-            return f"sweep parameter {param!r} is not a symbol name"
+        for s, vals in params.items():
+            vals = list(vals) if vals is not None else []
+            if not vals:
+                return "empty sweep"
+            for v in vals:
+                try:
+                    int(v)
+                except (TypeError, ValueError):
+                    return f"non-integer sweep value {v!r}"
+            if not str(s).isidentifier():
+                return f"sweep parameter {s!r} is not a symbol name"
+        if cores_axis is not None:
+            if not cores_axis:
+                return "empty cores axis"
+            if any(c < 1 for c in cores_axis):
+                return f"core counts must be >= 1, got {cores_axis!r}"
         return None
 
-    def sweep(self, kernel: LoopKernel, param: str, values,
+    def sweep(self, kernel: LoopKernel, param, values=None,
               models=("ecm",), predictor: str | None = None,
-              cores: int | None = None, sim_kwargs: dict | None = None,
+              cores=None, sim_kwargs: dict | None = None,
               incore: str | None = None,
               compiled: bool | str = "auto", **opts) -> dict[str, list[Result]]:
-        """Evaluate ``models`` at every ``param`` value (the batch API).
+        """Evaluate ``models`` over a parameter grid (the batch API).
 
-        Returns ``{model_name: [result per value]}``.  Each point's
-        predictor volumes and in-core analysis are computed once and shared
-        by all requested models; repeating the sweep hits the result cache.
+        ``param`` is either one symbol name (with ``values`` its value
+        list — the original 1-D surface) or a ``{symbol: values}`` mapping
+        describing an N-dimensional grid (``values`` must then be None).
+        ``cores`` is a scalar core count or a sequence — a sequence adds a
+        batched *cores axis* (always innermost), every point evaluated at
+        its own core count (effective shared-cache sizes and all).
+
+        Returns ``{model_name: [result per grid point]}``, points
+        flattened in C order (axes in ``param`` order, cores last).  Each
+        point's predictor volumes and in-core analysis are computed once
+        and shared by all requested models; repeating the sweep hits the
+        result cache.
 
         ``compiled`` selects the evaluation engine: ``"auto"`` (default)
-        routes single-symbol numeric sweeps under an analytic predictor
-        through a :class:`~repro.core.compiled.CompiledSweepPlan` — the
-        whole grid is batched through vectorized closed forms, the symbolic
-        path runs once per LC regime, and results are bit-for-bit identical
-        to the per-point path.  ``True`` requires the compiled path (raises
-        :class:`~repro.core.compiled.CompileError` when inapplicable, e.g.
-        under the SIM predictor); ``False`` forces per-point evaluation.
+        routes numeric sweeps under an analytic predictor through a
+        :class:`~repro.core.compiled.CompiledSweepPlan` — the whole grid
+        is batched through vectorized closed forms, the symbolic path runs
+        once per LC *regime cell* (the Cartesian decomposition of the grid
+        by identical per-level LC outcome), and results are bit-for-bit
+        identical to the per-point path.  ``True`` requires the compiled
+        path (raises :class:`~repro.core.compiled.CompileError` when
+        inapplicable, e.g. under the SIM predictor); ``False`` forces
+        per-point evaluation.
         """
         if not isinstance(kernel, LoopKernel):
             raise TypeError(
                 "sweep() varies symbolic loop constants, which only "
                 f"LoopKernel sources carry (got {type(kernel).__name__})")
+        if compiled not in (True, False, "auto"):
+            raise ValueError(f"compiled must be True/False/'auto', "
+                             f"got {compiled!r}")
+        cores_axis = self._cores_axis(cores)
+        if isinstance(param, Mapping):
+            if values is not None:
+                raise ValueError(
+                    "pass axis values inside the {symbol: values} mapping, "
+                    "not through values=")
+            params = {str(s): list(vs) for s, vs in param.items()}
+        else:
+            if values is None:
+                raise ValueError(f"sweep over {param!r} needs values")
+            params = None
+        if params is not None or cores_axis is not None:
+            return self._sweep_nd(kernel,
+                                  params if params is not None
+                                  else {str(param): list(values)},
+                                  cores_axis, models, predictor, cores,
+                                  sim_kwargs, incore, compiled, opts)
         predictor, cores, sim_kwargs = self._defaults(predictor, cores,
                                                       sim_kwargs)
         incore = self.incore_model if incore is None else incore
         values = list(values)
-        if compiled not in (True, False, "auto"):
-            raise ValueError(f"compiled must be True/False/'auto', "
-                             f"got {compiled!r}")
         if compiled is not False:
             blocker = self._compile_blocker(param, values, models, predictor)
             if blocker is None and (compiled is True or len(values) >= 4):
@@ -344,6 +408,49 @@ class AnalysisSession:
             for m in models:
                 out[str(m)].append(
                     self.analyze(bound, m, predictor=predictor, cores=cores,
+                                 sim_kwargs=sim_kwargs, incore=incore,
+                                 **opts))
+        return out
+
+    def _sweep_nd(self, kernel, params, cores_axis, models, predictor,
+                  cores, sim_kwargs, incore, compiled,
+                  opts) -> dict[str, list[Result]]:
+        """N-D grid sweep: flattened C-order evaluation over the Cartesian
+        product of the ``params`` axes (plus the cores axis when given),
+        compiled when eligible, per-point otherwise."""
+        predictor, cores_default, sim_kwargs = self._defaults(
+            predictor, None if cores_axis is not None else cores, sim_kwargs)
+        incore = self.incore_model if incore is None else incore
+        cores_spec = cores_axis if cores_axis is not None \
+            else int(cores_default)
+        blocker = None
+        if compiled is not False:
+            blocker = self._compile_blocker(params, None, models, predictor,
+                                            cores_axis=cores_axis)
+        npts_est = 1
+        for vs in params.values():
+            npts_est *= max(len(list(vs)), 1)
+        if cores_axis is not None:
+            npts_est *= max(len(cores_axis), 1)
+        if compiled is not False and blocker is None \
+                and (compiled is True or npts_est >= 4):
+            return self._sweep_compiled_nd(kernel, params, cores_spec,
+                                           models, predictor, sim_kwargs,
+                                           incore, opts)
+        if compiled is True:
+            raise CompileError(f"compiled sweep requested but {blocker}")
+        # per-point path over the full flattened grid (cores innermost)
+        axes = [[int(v) for v in vs] for vs in params.values()]
+        cl = cores_axis if cores_axis is not None else [int(cores_default)]
+        syms = list(params)
+        out: dict[str, list[Result]] = {str(m): [] for m in models}
+        for point in itertools.product(*axes, cl):
+            binding = dict(zip(syms, point[:-1]))
+            c = point[-1]
+            bound = kernel.bind(**binding)
+            for m in models:
+                out[str(m)].append(
+                    self.analyze(bound, m, predictor=predictor, cores=c,
                                  sim_kwargs=sim_kwargs, incore=incore,
                                  **opts))
         return out
@@ -420,4 +527,106 @@ class AnalysisSession:
                         self.stats.plan_fallback_points += 1
                         done[(mname, v)] = _point(v, m)
         return {mname: [done[(mname, v)] for v in ints]
+                for mname in model_names}
+
+    def _sweep_compiled_nd(self, kernel, params, cores_spec, models,
+                           predictor, sim_kwargs, incore,
+                           opts) -> dict[str, list[Result]]:
+        """Batched N-D sweep over a compiled plan (DESIGN.md §8).
+
+        The grid — the Cartesian product of the ``params`` axes plus the
+        cores axis when ``cores_spec`` is a list — is flattened in C order
+        and decomposed into *regime cells* of identical per-level LC
+        outcome in one vectorized call.  Each cell's representative runs
+        the ordinary memoized symbolic path (:meth:`analyze`) and its
+        frozen result object is broadcast — and cached under the per-point
+        keys — across the cell.  Models whose results bake in the core
+        count (``cores_invariant_result`` False, e.g. Roofline) subdivide
+        every cell by the point's cores before broadcasting; ECM results
+        only *derive* multicore numbers, so one representative serves the
+        whole cell across the cores axis.  The same two exactness guards
+        as the 1-D path apply (offset-ordering validity per point, regime
+        volumes vs the representative's symbolic volumes)."""
+        syms = tuple(params)
+        plan = self.sweep_plan(kernel, syms, incore=incore)
+        coords, cores_arr, _shape = meshgrid_points(params, cores=cores_spec)
+        npts = coords[syms[0]].size
+        per_point_cores = cores_arr if isinstance(cores_arr, np.ndarray) \
+            else None
+
+        def _cores_at(i: int) -> int:
+            return int(per_point_cores[i]) if per_point_cores is not None \
+                else int(cores_arr)
+
+        bindings = [tuple(int(coords[s][i]) for s in syms)
+                    for i in range(npts)]
+        bound: dict[tuple, LoopKernel] = {}
+        for b in bindings:
+            if b not in bound:
+                bound[b] = kernel.bind(**dict(zip(syms, b)))
+        keys: dict[tuple, tuple] = {}
+        done: dict[tuple, Result] = {}
+        missing: set[int] = set()
+        model_names = [str(m) for m in models]
+        for m, mname in zip(models, model_names):
+            rname = resolve_model(m).name
+            kcache: dict[tuple, tuple] = {}
+            for i in range(npts):
+                bk = (bindings[i], _cores_at(i))
+                key = kcache.get(bk)
+                if key is None:
+                    key = kcache[bk] = self._loop_key(
+                        rname, bound[bindings[i]], predictor, bk[1],
+                        sim_kwargs, incore, opts)
+                keys[(mname, i)] = key
+                hit = self._results.get(key)
+                if hit is not None:
+                    self.stats.result_hits += 1
+                    done[(mname, i)] = hit
+                else:
+                    missing.add(i)
+
+        def _point(i, m):
+            return self.analyze(bound[bindings[i]], m, predictor=predictor,
+                                cores=_cores_at(i), sim_kwargs=sim_kwargs,
+                                incore=incore, **opts)
+
+        if missing:
+            groups, fallback = plan.regimes_grid(coords, cores=cores_arr)
+            for m, mname in zip(models, model_names):
+                inv = getattr(resolve_model(m), "cores_invariant_result",
+                              False)
+                for sig, members in groups.items():
+                    cells = [members] if inv or per_point_cores is None \
+                        else [list(g) for _, g in itertools.groupby(
+                            sorted(members, key=_cores_at), key=_cores_at)]
+                    for cell in cells:
+                        todo = [i for i in cell if (mname, i) not in done]
+                        if not todo:
+                            continue
+                        rep, rest = todo[0], todo[1:]
+                        res = done[(mname, rep)] = _point(rep, m)
+                        if not rest:
+                            continue
+                        # exactness guard: the symbolic volumes of the cell
+                        # representative must equal the batched prediction
+                        vol = self.volumes(bound[bindings[rep]], predictor,
+                                           _cores_at(rep), sim_kwargs)
+                        want = plan.signature_volumes(sig)
+                        if (set(vol.bytes_per_it) == set(want)
+                                and all(vol.bytes_per_it[k] == want[k]
+                                        for k in want)):
+                            for i in rest:
+                                self._results[keys[(mname, i)]] = res
+                                done[(mname, i)] = res
+                                self.stats.plan_broadcasts += 1
+                        else:
+                            self.stats.plan_fallback_points += len(rest)
+                            for i in rest:
+                                done[(mname, i)] = _point(i, m)
+                for i in fallback:
+                    if (mname, i) not in done:
+                        self.stats.plan_fallback_points += 1
+                        done[(mname, i)] = _point(i, m)
+        return {mname: [done[(mname, i)] for i in range(npts)]
                 for mname in model_names}

@@ -335,10 +335,10 @@ class AnalysisService:
             return LintedResult(res, report)
         return res
 
-    def sweep(self, source: Any, machine: Machine | str, param: str,
-              values, models=("ecm",), predictor: str = "LC", *,
+    def sweep(self, source: Any, machine: Machine | str, param,
+              values=None, models=("ecm",), predictor: str = "LC", *,
               frontend: str | None = None, name: str | None = None,
-              constants: dict | None = None, cores: int = 1,
+              constants: dict | None = None, cores=1,
               sim_kwargs: dict | None = None, incore: str = "simple",
               lint: str = "off",
               frontend_opts: dict | None = None,
@@ -346,6 +346,10 @@ class AnalysisService:
               **opts) -> dict[str, list[Result]]:
         """Serve a whole sweep as one cacheable request.
 
+        ``param``/``values``/``cores`` follow :func:`repro.core.api.sweep`
+        — a ``{symbol: values}`` mapping and/or a cores sequence describe
+        an N-D grid, keyed by the frozen axis spec (1-D requests keep
+        their original key shape, so existing disk entries stay warm).
         The disk entry stores deduplicated per-regime payloads, so a warm
         1000-point sweep costs one file read plus a handful of
         ``from_dict`` calls.  ``workers > 1`` shards a cold sweep across
@@ -358,14 +362,32 @@ class AnalysisService:
         mach = _api.resolve_machine(machine)
         kernel = self._load(source, frontend, name, constants, frontend_opts)
         model_names = [str(m) for m in models]
+        nd_param = isinstance(param, dict)
+        cores_axis = AnalysisSession._cores_axis(cores)
         report = self._lint_gate(kernel, mach, lint, models=model_names,
                                  predictor=predictor, incore=incore,
-                                 compiled=compiled)
+                                 compiled=compiled,
+                                 sweep_params=(list(param) if nd_param
+                                               else [str(param)]),
+                                 cores_axis=cores_axis is not None)
         sess = self.session(mach)
-        values = list(values)
+        if nd_param:
+            param = {str(s): list(vs) for s, vs in param.items()}
+            npoints = 1
+            for vs in param.values():
+                npoints *= max(len(vs), 1)
+        else:
+            values = list(values)
+            npoints = len(values)
+        if cores_axis is not None:
+            cores = cores_axis
+            npoints *= max(len(cores_axis), 1)
         key = ("sweep", tuple(resolve_model(m).name for m in model_names),
-               source_key(kernel), mach.fingerprint, str(param),
-               freeze(values), predictor.upper(), int(cores),
+               source_key(kernel), mach.fingerprint,
+               freeze(param) if nd_param else str(param),
+               freeze(values), predictor.upper(),
+               freeze(tuple(cores_axis)) if cores_axis is not None
+               else int(cores),
                sess.sim_key(predictor, sim_kwargs or {}), incore.lower(),
                freeze(opts))
         self._count(requests=1)
@@ -380,7 +402,7 @@ class AnalysisService:
                 return None                 # foreign/corrupt -> recompute
 
         def compute():
-            if workers and workers > 1 and len(values) > 1:
+            if workers and workers > 1 and npoints > 1:
                 self._count(worker_batches=1)
                 out = sweep_sharded(
                     kernel, mach, param, values, models=model_names,
@@ -396,8 +418,9 @@ class AnalysisService:
                                   for m, rs in out.items()}}
             meta = self._meta("sweep", mach, kernel,
                               ",".join(model_names), predictor, incore)
-            meta["param"] = str(param)
-            meta["points"] = len(values)
+            meta["param"] = ("x".join(param) if nd_param else str(param)) \
+                + ("xcores" if cores_axis is not None else "")
+            meta["points"] = npoints
             return out, payload, meta
 
         out = self._serve(key, compute, decode, None)

@@ -47,8 +47,8 @@ def chunk_values(values: list, workers: int) -> list[list]:
     return out
 
 
-def _run_chunk(machine: Machine, kernel: LoopKernel, param: str,
-               values: list, models: tuple, predictor: str, cores: int,
+def _run_chunk(machine: Machine, kernel: LoopKernel, param,
+               values, models: tuple, predictor: str, cores,
                sim_kwargs: dict | None, incore: str, compiled,
                opts: dict) -> dict:
     """Worker entry: one shard through a fresh session, results wire-
@@ -80,15 +80,23 @@ def _ensure_importable_env() -> tuple[str, str | None]:
     return "PYTHONPATH", old
 
 
-def sweep_sharded(kernel: LoopKernel, machine: Machine, param: str,
-                  values, models=("ecm",), predictor: str = "LC",
-                  cores: int = 1, sim_kwargs: dict | None = None,
+def sweep_sharded(kernel: LoopKernel, machine: Machine, param,
+                  values=None, models=("ecm",), predictor: str = "LC",
+                  cores=1, sim_kwargs: dict | None = None,
                   incore: str = "simple", compiled: bool | str = "auto",
                   workers: int = 2, opts: dict | None = None,
                   start_method: str | None = None) -> dict:
     """Evaluate a sweep across a pool of worker processes.
 
-    Returns the same ``{model: [Result per value]}`` mapping as
+    ``param``/``values``/``cores`` follow :meth:`AnalysisSession.sweep`:
+    a ``{symbol: values}`` mapping and/or a cores sequence describe an
+    N-D grid.  Sharding is by contiguous tiles of the **outermost** axis
+    (the first ``param`` symbol, or the value list for 1-D sweeps) —
+    C-order flattening makes the merged chunks exactly the sequential
+    point order, and each worker still batches its whole tile through
+    one compiled plan.
+
+    Returns the same ``{model: [Result per point]}`` mapping as
     :meth:`AnalysisSession.sweep`, with results that serialize
     identically (``to_dict`` parity is pinned by tests and
     ``benchmarks/service_bench.py``).  Regime-shared results stay shared
@@ -103,12 +111,24 @@ def sweep_sharded(kernel: LoopKernel, machine: Machine, param: str,
         raise TypeError(
             "worker-pool sweeps vary symbolic loop constants, which only "
             f"LoopKernel sources carry (got {type(kernel).__name__})")
-    values = list(values)
+    nd = isinstance(param, dict)
+    if nd:
+        if values is not None:
+            raise ValueError(
+                "pass axis values inside the {symbol: values} mapping, "
+                "not through values=")
+        axes = {str(s): list(vs) for s, vs in param.items()}
+        outer = next(iter(axes))
+        outer_vals = axes[outer]
+    else:
+        values = list(values)
+        outer_vals = values
     model_names = [str(m) for m in models]
-    chunks = chunk_values(values, workers)
+    chunks = chunk_values(outer_vals, workers)
     if len(chunks) <= 1:
         sess = AnalysisSession(machine)
-        return sess.sweep(kernel, param, values, models=model_names,
+        return sess.sweep(kernel, dict(axes) if nd else param, values,
+                          models=model_names,
                           predictor=predictor, cores=cores,
                           sim_kwargs=sim_kwargs, incore=incore,
                           compiled=compiled, **(opts or {}))
@@ -116,13 +136,23 @@ def sweep_sharded(kernel: LoopKernel, machine: Machine, param: str,
               or os.environ.get("REPRO_WORKER_START_METHOD", "spawn"))
     ctx = mp.get_context(method)
     env_key, env_old = _ensure_importable_env()
+
+    def _shard(chunk):
+        if nd:
+            return {**{outer: chunk},
+                    **{s: vs for s, vs in axes.items() if s != outer}}, None
+        return param, chunk
+
     try:
         with ProcessPoolExecutor(max_workers=len(chunks),
                                  mp_context=ctx) as ex:
-            futs = [ex.submit(_run_chunk, machine, kernel, param, c,
-                              tuple(model_names), predictor, cores,
-                              sim_kwargs, incore, compiled, opts or {})
-                    for c in chunks]
+            futs = []
+            for c in chunks:
+                param_c, values_c = _shard(c)
+                futs.append(ex.submit(
+                    _run_chunk, machine, kernel, param_c, values_c,
+                    tuple(model_names), predictor, cores,
+                    sim_kwargs, incore, compiled, opts or {}))
             parts = [f.result() for f in futs]
     finally:
         if env_old is None:

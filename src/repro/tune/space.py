@@ -289,13 +289,17 @@ class _StencilSpace(CandidateSpace):
     runs the traced LoopKernel through :func:`repro.core.blocking
     .grid_search` (compiled analytic plan, metric='ecm') and converts
     cycles per unit of work into predicted seconds per cutout; the
-    measured side times the Pallas kernel on the same cutout."""
+    measured side times the Pallas kernel on the same cutout.  A
+    ``cores`` config > 1 ranks over the batched (block x cores) grid
+    instead, scoring each block by its chip-level saturated performance
+    at the target core count."""
 
     #: subclasses: trace source, halo radius, plane count for VMEM check
     TRACE = ""
     RADIUS = 1
     PLANES = 4
-    DEFAULTS = {"m": 16, "n_min": 32, "n_max": 128, "n_step": 16}
+    DEFAULTS = {"m": 16, "n_min": 32, "n_max": 128, "n_step": 16,
+                "cores": 1}
 
     def _values(self) -> list[int]:
         c = self.config
@@ -329,9 +333,24 @@ class _StencilSpace(CandidateSpace):
         kernel = api.load_kernel(self.TRACE,
                                  constants={"M": int(self.config["m"])})
         vals = sorted({int(c.config["n"]) for c in cands})
-        gs = blocking.grid_search(kernel, m, [("N", vals)], model="ecm",
-                                  session=session)
-        score = {p["N"]: s for p, s in gs.ranking}
+        n_cores = int(self.config["cores"])
+        if n_cores > 1:
+            # rank over the batched (block x cores) grid: per-candidate
+            # score = saturated min(single*n, sat) at the target core
+            # count, converted back to effective cycles per unit below
+            gs = blocking.grid_search(kernel, m, [("N", vals)],
+                                      model="ecm", session=session,
+                                      cores=list(range(1, n_cores + 1)))
+            r0 = gs.best_result
+            perf = {n: float(gs.scores[i, -1])
+                    for i, n in enumerate(vals)}
+            score = {n: (r0.flops_per_unit * m.clock_hz / p
+                         if p > 0 else math.inf)
+                     for n, p in perf.items()}
+        else:
+            gs = blocking.grid_search(kernel, m, [("N", vals)],
+                                      model="ecm", session=session)
+            score = {p["N"]: s for p, s in gs.ranking}
         unit = gs.best_result.unit_iterations
         clock = m.clock_hz or 1e9
         vmem_limit = (m.vmem_bytes or 2 ** 27) * VMEM_BUDGET

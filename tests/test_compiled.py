@@ -219,6 +219,77 @@ class TestSessionRouting:
 
 
 # ----------------------------------------------------------------------
+class TestNDSweeps:
+    """N-D (params x cores) grids: the batched path must be to_dict-
+    identical to nested per-point binds, across LC transitions on every
+    axis (DESIGN.md §8)."""
+
+    @given(st.integers(1, 3), st.booleans())
+    @settings(max_examples=4, deadline=None)
+    def test_random_star2d_nd_identity(self, radius, with_cores):
+        ivy = load_machine("IVY")
+        k = _star2d(radius, 200)
+        tv = _transition_values(k, ivy, lo=8 * radius + 4, hi=2000)
+        # a handful of N values straddling transitions, plus an M axis
+        n_vals = sorted({tv[0], tv[len(tv) // 2], tv[-1],
+                         tv[len(tv) // 3]})
+        grid = {"M": [24, 40, 72], "N": n_vals}
+        cores = [1, 2, 4] if with_cores else None
+        sym = AnalysisSession(ivy).sweep(k, grid, cores=cores,
+                                         compiled=False)
+        comp = AnalysisSession(ivy).sweep(k, grid, cores=cores,
+                                          compiled=True)
+        assert len(comp["ecm"]) == len(grid["M"]) * len(n_vals) * \
+            (len(cores) if cores else 1)
+        for a, b in zip(sym["ecm"], comp["ecm"]):
+            assert a.to_dict() == b.to_dict()
+
+    @given(st.integers(1, 2))
+    @settings(max_examples=2, deadline=None)
+    def test_random_star3d_nd_identity(self, radius):
+        ivy = load_machine("IVY")
+        k = _star3d(radius, 100)
+        tv = _transition_values(k, ivy, lo=8 * radius + 4, hi=700)
+        n_vals = sorted({tv[0], tv[len(tv) // 2], tv[-1]})
+        grid = {"M": [20, 34], "N": n_vals}
+        sym = AnalysisSession(ivy).sweep(k, grid, cores=[1, 2, 4],
+                                         compiled=False)
+        comp = AnalysisSession(ivy).sweep(k, grid, cores=[1, 2, 4],
+                                          compiled=True)
+        for a, b in zip(sym["ecm"], comp["ecm"]):
+            assert a.to_dict() == b.to_dict()
+
+    def test_multi_symbol_sweep_routes_compiled(self, ivy, longrange):
+        """A {symbol: values} grid under an analytic predictor routes
+        through one compiled N-D plan on auto (satellite: X307 names the
+        combos that can't; this pins the ones that can)."""
+        sess = AnalysisSession(ivy)
+        out = sess.sweep(longrange, {"M": [80, 130], "N": [400, 600, 800]})
+        assert len(out["ecm"]) == 6
+        assert sess.stats.plan_compiles == 1
+        assert sess.stats.plan_broadcasts > 0
+
+    def test_cores_axis_sweep_routes_compiled(self, ivy, longrange):
+        sess = AnalysisSession(ivy)
+        out = sess.sweep(longrange, "N", [300, 500, 700],
+                         cores=[1, 2, 4, 8])
+        assert len(out["ecm"]) == 12
+        assert sess.stats.plan_compiles == 1
+        # ECM results are cores-invariant: the cores axis must broadcast
+        # instead of multiplying the symbolic work
+        assert sess.stats.result_misses <= 3 + 1
+
+    def test_scaling_curve_matches_per_cores_loop(self, ivy, longrange):
+        res = AnalysisSession(ivy).analyze(longrange, "ecm")
+        curve = res.scaling_curve(16)
+        assert curve == [res.performance_flops(c) for c in range(1, 17)]
+        assert res.scaling_curve(0) == []
+        n_sat = res.saturation_cores
+        if math.isfinite(curve[-1]) and n_sat <= 16:
+            assert curve[n_sat - 1] == pytest.approx(curve[-1])
+
+
+# ----------------------------------------------------------------------
 class TestGridSearch:
     def test_1d_grid_matches_pointwise(self, ivy, longrange):
         gs = blocking.grid_search(longrange, ivy,
@@ -272,6 +343,62 @@ class TestGridSearch:
         with pytest.raises(CompileError):
             blocking.grid_search(longrange, ivy, [("N", [64, 128])],
                                  predictor="SIM")
+
+    def test_cores_axis_matches_pointwise_saturation(self, ivy, longrange):
+        """Every (block, cores) cell of the batched grid equals the
+        per-point chip-level saturation closed form min(single*n, sat)."""
+        blocks = [128, 256, 512]
+        cores = [1, 2, 4]
+        gs = blocking.grid_search(longrange, ivy, [("N", blocks)],
+                                  cores=cores)
+        assert gs.metric == "flops_at_cores"
+        assert gs.scores.shape == (3, 3)
+        assert gs.cores_grid == (1, 2, 4)
+        sess = AnalysisSession(ivy)
+        for i, v in enumerate(blocks):
+            for j, c in enumerate(cores):
+                # per-point reference at the cell's own core count
+                # (effective shared-cache sizes shrink with cores)
+                res = sess.analyze(longrange.bind(N=v), "ecm", cores=c)
+                assert gs.scores[i, j] == res.performance_flops(c)
+                assert gs.n_sat[i, j] == res.saturation_cores
+        assert gs.best_cores in cores
+        assert gs.best_result.performance_flops(gs.best_cores) \
+            == pytest.approx(gs.best_score)
+        assert {e["cores"] for e in gs.best_per_cores} == set(cores)
+        assert gs.sweet_spot["cores"] in cores
+        d = gs.to_dict()
+        assert d["cores_grid"] == [1, 2, 4]
+        assert d["n_sat"] == gs.n_sat.tolist()
+        assert d["sweet_spot"]["cores"] == gs.sweet_spot["cores"]
+
+    def test_paper_nsat_block_cores_regression(self, ivy):
+        """Paper case study (ivybridge_ep, 3D 7-pt, M=300): saturation at
+        4 cores for the in-memory N=200 set; at N=900 the per-core share
+        of L3 breaks the layer condition once cores > 1 and saturation
+        drops to 3."""
+        k = parse_kernel((STENCILS / "stencil_3d7pt.c").read_text(),
+                         constants={"M": 300, "N": 700})
+        gs = blocking.grid_search(k, ivy, [("N", [200, 900])],
+                                  cores=[1, 2, 4, 8])
+        assert gs.n_sat[0].tolist() == [4, 4, 4, 4]
+        assert gs.n_sat[1].tolist() == [5, 3, 3, 3]
+        sess = AnalysisSession(ivy)
+        assert sess.analyze(k.bind(N=200), "ecm",
+                            cores=4).saturation_cores == 4
+        assert sess.analyze(k.bind(N=900), "ecm",
+                            cores=4).saturation_cores == 3
+
+    def test_cores_axis_validation(self, ivy, longrange):
+        with pytest.raises(ValueError, match="empty cores axis"):
+            blocking.grid_search(longrange, ivy, [("N", [64, 128])],
+                                 cores=[])
+        with pytest.raises(ValueError, match=">= 1"):
+            blocking.grid_search(longrange, ivy, [("N", [64, 128])],
+                                 cores=[0, 1])
+        with pytest.raises(ValueError, match="saturation"):
+            blocking.grid_search(longrange, ivy, [("N", [64, 128])],
+                                 cores=[1, 2], model="roofline-iaca")
 
 
 # ----------------------------------------------------------------------
@@ -386,12 +513,74 @@ class TestCLI:
         assert d["symbols"] == ["N"] and len(d["scores"]) == 8
         assert d["best_result"]["model"] == "ecm"
 
+    def test_sweep_multi_range_dense_identical(self, capsys):
+        """Repeated --range axes under LC route through one compiled N-D
+        plan; --dense (compiled=True) must not change the payload."""
+        base = ["sweep", "configs/stencils/stencil_3d7pt.c", "-m", "IVY",
+                "--range", "M", "40", "80", "40",
+                "--range", "N", "60", "240", "60", "--json"]
+        rc, plain, _ = run_cli(base, capsys)
+        assert rc == 0
+        rc, dense, _ = run_cli(base + ["--dense"], capsys)
+        assert rc == 0
+        assert json.loads(dense) == json.loads(plain)
+        assert len(json.loads(dense)["ecm"]) == 2 * 4
+
+    def test_sweep_multi_range_sim_dense_x307(self, capsys):
+        """SIM has no closed form on *any* axis: the multi-axis dense
+        combo is named by the X307 preflight diagnostic (exit 3)."""
+        rc, _, err = run_cli(
+            ["sweep", "configs/stencils/stencil_2d5pt.c", "-m", "IVY",
+             "--range", "M", "20", "40", "20",
+             "--range", "N", "40", "80", "20",
+             "--cache-predictor", "SIM", "--dense"], capsys)
+        assert rc == 3
+        assert "X307" in err
+        assert "M" in err and "N" in err
+
+    def test_sweep_cores_range_json(self, capsys):
+        rc, out, _ = run_cli(
+            ["sweep", "configs/stencils/stencil_3d7pt.c", "-m", "IVY",
+             "--param", "N", "--range", "100", "300", "100",
+             "--cores-range", "1", "4", "1", "-D", "M", "40", "--json"],
+            capsys)
+        assert rc == 0
+        d = json.loads(out)
+        assert len(d["ecm"]) == 3 * 4
+        # cores innermost, each point annotated with its saturated rate
+        assert [r["cores"] for r in d["ecm"][:4]] == [1, 2, 3, 4]
+        assert all("performance_at_cores" in r for r in d["ecm"])
+
+    def test_blocking_grid_cores_range_text(self, capsys):
+        rc, out, _ = run_cli(
+            ["blocking", "configs/stencils/stencil_3d7pt.c", "-m", "IVY",
+             "-D", "M", "300", "-D", "N", "700",
+             "--grid", "64", "512", "64", "--cores-range", "1", "8", "1"],
+            capsys)
+        assert rc == 0
+        assert "cores =" in out
+        assert "best block per core count" in out
+        assert "n_sat" in out
+        assert "sweet spot:" in out
+
+    def test_blocking_cores_range_requires_grid(self, capsys):
+        rc, _, err = run_cli(
+            ["blocking", "configs/stencils/stencil_3d7pt.c", "-m", "IVY",
+             "-D", "M", "40", "-D", "N", "100",
+             "--cores-range", "1", "4", "1"], capsys)
+        assert rc == 2
+        assert "--cores-range needs --grid" in err
+
     def test_blocking_grid_rejects_sim(self, capsys):
+        """SIM + --grid routes through the lint cross-rules like sweep
+        --dense does, exiting 3 with the X303 diagnostic instead of a
+        deep CompileError."""
         rc, _, err = run_cli(
             ["blocking", "configs/stencils/stencil_2d5pt.c", "-m", "IVY",
              "-D", "M", "200", "-D", "N", "400", "--cache-predictor", "SIM",
              "--grid", "32", "64", "16"], capsys)
-        assert rc == 2
+        assert rc == 3
+        assert "X303" in err
         assert "no analytic closed form" in err
 
     def test_blocking_grid2_requires_grid(self, capsys):
